@@ -1,0 +1,65 @@
+"""Fig. 12 reproduction: storage bytes + preprocessing time per format."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CBMatrix
+from repro.data import matrices
+
+from . import formats as F
+
+
+def run(scale="small") -> list[dict]:
+    out = []
+    for spec, r, c, v, shape in matrices.corpus(scale):
+        m, n = shape
+        nnz = len(v)
+        v64 = v.astype(np.float64)
+
+        t0 = time.perf_counter()
+        F.to_csr(r, c, v64, shape)
+        t_csr = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ts = F.to_bsr(r, c, v64, shape, 16)
+        t_bsr = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cb = CBMatrix.from_coo(r, c, v64, shape, block_size=16,
+                               val_dtype=np.float64)
+        t_cb = time.perf_counter() - t0
+
+        # storage (paper §4.4.1 models: int32 idx, FP64 vals)
+        csr_bytes = (m + 1) * 4 + nnz * 4 + nnz * 8
+        nnzb = int((np.asarray(ts.brow) >= 0).sum())
+        bsr_bytes = 256 * 8 * nnzb + (-(-m // 16) + 1) * 4 + nnzb * 4
+        cb_bytes = cb.nbytes_structure()["total"]
+
+        out.append({
+            "matrix": spec.name, "nnz": nnz,
+            "csr_bytes": csr_bytes, "bsr_bytes": bsr_bytes,
+            "cb_bytes": cb_bytes,
+            "t_pre_csr_ms": t_csr * 1e3, "t_pre_bsr_ms": t_bsr * 1e3,
+            "t_pre_cb_ms": t_cb * 1e3,
+        })
+    return out
+
+
+def main():
+    rows = run()
+    print("matrix,nnz,cb_bytes/csr,cb_bytes/bsr,pre_cb_ms,pre_csr_ms,pre_bsr_ms")
+    for r in rows:
+        print(f"{r['matrix']},{r['nnz']},"
+              f"{r['cb_bytes'] / r['csr_bytes']:.2f},"
+              f"{r['cb_bytes'] / r['bsr_bytes']:.3f},"
+              f"{r['t_pre_cb_ms']:.1f},{r['t_pre_csr_ms']:.1f},"
+              f"{r['t_pre_bsr_ms']:.1f}")
+    ratio = np.mean([r["cb_bytes"] / r["csr_bytes"] for r in rows])
+    print(f"MEAN cb/csr storage ratio: {ratio:.2f} (paper: ~CSR parity)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Fig. 9 reproduction: CB-SpMV vs CSR / COO / BSR across the matrix corpus.
+
+The paper reports GPU Gflops; offline the comparable signal is (a) CPU
+wall-time of the jitted XLA implementation of each format (directional —
+same compiler, same machine) and (b) the modeled HBM traffic per SpMV
+(bytes that must move for one y = A x pass), which is what determines GPU
+SpMV performance (it is bandwidth-bound). Speedup columns are vs CB.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CBMatrix
+from repro.core.streams import build_streams
+from repro.data import matrices
+
+from . import formats as F
+
+
+def _time(fn, *args, reps=20):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def modeled_bytes(rows, cols, vals, shape, fmt: str, B=16, vbytes=8) -> int:
+    """One-pass traffic model: every stored byte read once + x gathers +
+    y writes (line-granular x traffic is fig10's job; this is the raw
+    footprint the formats force through HBM)."""
+    nnz = len(vals)
+    m, n = shape
+    if fmt == "csr":
+        return (m + 1) * 4 + nnz * 4 + nnz * vbytes + nnz * vbytes + m * vbytes
+    if fmt == "coo":
+        return nnz * (8 + vbytes) + nnz * vbytes + m * vbytes
+    if fmt == "bsr":
+        ts = F.to_bsr(rows, cols, vals, shape, B)
+        return (ts.num_tiles * B * B * vbytes + ts.num_tiles * 8
+                + ts.num_tiles * B * vbytes + m * vbytes)
+    if fmt == "cb":
+        cb = CBMatrix.from_coo(rows, cols, vals, shape, block_size=B,
+                               val_dtype=np.float64 if vbytes == 8 else np.float32)
+        meta = cb.nbytes_structure()
+        return (meta["packed_data"] + meta["high_level_metadata"]
+                + meta["column_agg_maps"] + cb.nnz * vbytes + m * vbytes)
+    raise ValueError(fmt)
+
+
+def run(scale="small") -> list[dict]:
+    rows_out = []
+    for spec, r, c, v, shape in matrices.corpus(scale):
+        m, n = shape
+        v32 = v.astype(np.float32)
+        x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+        xj = jnp.asarray(x)
+
+        # CSR
+        rp, ci, cv = F.to_csr(r, c, v32, shape)
+        csr_fn = jax.jit(lambda rp, ci, cv, x: F.csr_spmv(rp, ci, cv, x, m))
+        t_csr = _time(csr_fn, jnp.asarray(rp), jnp.asarray(ci),
+                      jnp.asarray(cv), xj)
+
+        # COO
+        coo_fn = jax.jit(lambda r_, c_, v_, x: F.coo_spmv(r_, c_, v_, x, m))
+        t_coo = _time(coo_fn, jnp.asarray(r), jnp.asarray(c),
+                      jnp.asarray(v32), xj)
+
+        # BSR (dense blocks)
+        ts = F.to_bsr(r, c, v32, shape, 16)
+        ts_j = jax.tree_util.tree_map(jnp.asarray, ts)
+        t_bsr = _time(jax.jit(F.bsr_spmv), ts_j, xj)
+
+        # CB
+        cb = CBMatrix.from_coo(r, c, v32, shape, block_size=16,
+                               val_dtype=np.float32)
+        st = build_streams(cb).device_put()
+        t_cb = _time(jax.jit(F.cb_spmv_jit), st, xj)
+
+        gflop = 2 * len(v) / 1e9
+        row = {
+            "matrix": spec.name, "nnz": len(v),
+            "cb_gflops": gflop / t_cb,
+            "speedup_vs_csr": t_csr / t_cb,
+            "speedup_vs_coo": t_coo / t_cb,
+            "speedup_vs_bsr": t_bsr / t_cb,
+            "bytes_cb": modeled_bytes(r, c, v, shape, "cb"),
+            "bytes_csr": modeled_bytes(r, c, v, shape, "csr"),
+            "bytes_bsr": modeled_bytes(r, c, v, shape, "bsr"),
+        }
+        rows_out.append(row)
+    return rows_out
+
+
+def main():
+    rows = run()
+    print("matrix,nnz,cb_gflops,speed_vs_csr,speed_vs_coo,speed_vs_bsr,"
+          "bytes_cb_over_csr,bytes_cb_over_bsr")
+    geo = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+    for r in rows:
+        print(f"{r['matrix']},{r['nnz']},{r['cb_gflops']:.3f},"
+              f"{r['speedup_vs_csr']:.2f},{r['speedup_vs_coo']:.2f},"
+              f"{r['speedup_vs_bsr']:.2f},"
+              f"{r['bytes_cb'] / r['bytes_csr']:.2f},"
+              f"{r['bytes_cb'] / r['bytes_bsr']:.2f}")
+    print(f"GEOMEAN,,,{geo([r['speedup_vs_csr'] for r in rows]):.2f},"
+          f"{geo([r['speedup_vs_coo'] for r in rows]):.2f},"
+          f"{geo([r['speedup_vs_bsr'] for r in rows]):.2f},"
+          f"{geo([r['bytes_cb'] / r['bytes_csr'] for r in rows]):.2f},"
+          f"{geo([r['bytes_cb'] / r['bytes_bsr'] for r in rows]):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

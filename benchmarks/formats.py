@@ -1,0 +1,194 @@
+"""Reference SpMV implementations for the baseline formats the paper
+compares against (CSR, COO, BSR, TileSpMV-style) — all in JAX so wall-time
+comparisons on CPU are apples-to-apples, plus byte-level access-stream
+generators for the cache-locality model (benchmarks/fig10).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CBMatrix, partition_coo, select_formats
+from repro.core.streams import build_streams, build_tile_stream
+
+
+# ---------------------------------------------------------------------------
+# format builders (host-side preprocessing, like the paper's conversion step)
+# ---------------------------------------------------------------------------
+
+def to_csr(rows, cols, vals, shape):
+    m, n = shape
+    order = np.lexsort((cols, rows))
+    r, c, v = rows[order], cols[order], vals[order]
+    row_ptr = np.zeros(m + 1, np.int64)
+    np.add.at(row_ptr, r + 1, 1)
+    row_ptr = np.cumsum(row_ptr)
+    return row_ptr.astype(np.int32), c.astype(np.int32), v
+
+
+def to_bsr(rows, cols, vals, shape, B=16):
+    """Dense B x B blocks incl. zeros (the BSR storage the paper critiques)."""
+    return build_tile_stream(rows, cols, vals, shape, B)
+
+
+# ---------------------------------------------------------------------------
+# jitted SpMV per format
+# ---------------------------------------------------------------------------
+
+def csr_spmv(row_ptr, col_idx, csr_val, x, m):
+    """Row-segment SpMV (jax: segment_sum over row ids)."""
+    row_ids = jnp.repeat(
+        jnp.arange(m), jnp.diff(row_ptr), total_repeat_length=len(col_idx)
+    )
+    prod = csr_val * x[col_idx]
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m)
+
+
+def coo_spmv(rows, cols, vals, x, m):
+    return jnp.zeros(m, vals.dtype).at[rows].add(vals * x[cols])
+
+
+def bsr_spmv(stream, x):
+    """Dense-block SpMV: every stored zero costs real bandwidth/FLOPs."""
+    from repro.kernels import ref
+
+    B, mb, nb = stream.block_size, stream.mb, stream.nb
+    xp = jnp.pad(x, (0, nb * B - x.shape[0])).reshape(nb, B)
+    return ref.block_dense_spmv(
+        stream.tiles, stream.brow, xp[stream.bcol], mb
+    ).reshape(-1)[: stream.m]
+
+
+def cb_spmv_jit(streams, x):
+    from repro.kernels import ops
+
+    return ops.cb_spmv(streams, x, impl="reference")
+
+
+# ---------------------------------------------------------------------------
+# access-stream generation for the cache model (fig10)
+# ---------------------------------------------------------------------------
+
+LINE = 128  # bytes per cache line
+
+
+def _lines(base: int, offsets_bytes: np.ndarray) -> np.ndarray:
+    return (base + offsets_bytes) // LINE
+
+
+def access_stream_csr(rows, cols, vals, shape, vbytes=8):
+    """Interleaved (col_idx[j], val[j], x[col]) accesses, row-major —
+    the paper's Fig. 1 traversal. Arrays live in separate regions."""
+    m, n = shape
+    row_ptr, c, v = to_csr(rows, cols, vals, shape)
+    nnz = len(c)
+    base_col = 0
+    base_val = base_col + nnz * 4
+    base_x = base_val + nnz * vbytes
+    j = np.arange(nnz)
+    tri = np.empty(3 * nnz, np.int64)
+    tri[0::3] = _lines(base_col, j * 4)
+    tri[1::3] = _lines(base_val, j * vbytes)
+    tri[2::3] = _lines(base_x, c.astype(np.int64) * vbytes)
+    return tri, base_x + n * vbytes
+
+
+def access_stream_bsr(rows, cols, vals, shape, B=16, vbytes=8):
+    """Block-dense traversal: all B*B values of every non-zero block."""
+    stream = to_bsr(rows, cols, vals, shape, B)
+    brow = np.asarray(stream.brow)
+    bcol = np.asarray(stream.bcol)
+    nblk = len(brow)
+    base_val = 0
+    base_x = nblk * B * B * vbytes
+    out = []
+    elem = np.arange(B * B, dtype=np.int64)
+    xcol = np.arange(B, dtype=np.int64)
+    for i in range(nblk):
+        out.append(_lines(base_val, (i * B * B + elem) * vbytes))
+        out.append(_lines(base_x, (bcol[i] * B + xcol) * vbytes))
+    return np.concatenate(out), base_x + shape[1] * vbytes
+
+
+def access_stream_tile(rows, cols, vals, shape, B=16, vbytes=8):
+    """TileSpMV-style: per-block compressed storage but coordinates and
+    values in SEPARATE arrays (the locality gap CB closes)."""
+    part = partition_coo(rows, cols, vals, shape, B)
+    nnz = part.nnz
+    base_idx = 0
+    base_val = nnz * 1            # packed uint8 coords
+    base_x = base_val + nnz * vbytes
+    out = []
+    for i in range(part.num_blocks):
+        s, e = part.blk_ptr[i], part.blk_ptr[i + 1]
+        j = np.arange(s, e, dtype=np.int64)
+        iv = np.empty(2 * len(j), np.int64)
+        iv[0::2] = _lines(base_idx, j)
+        iv[1::2] = _lines(base_val, j * vbytes)
+        out.append(iv)
+        lc = part.local_cols[s:e].astype(np.int64)
+        out.append(_lines(base_x, (part.blk_col_idx[i] * B + lc) * vbytes))
+    return np.concatenate(out), base_x + shape[1] * vbytes
+
+
+def access_stream_cb(rows, cols, vals, shape, B=16, vbytes=8,
+                     use_colagg="auto"):
+    """CB: ONE contiguous region per block (coords+pad+values via VP)."""
+    cb = CBMatrix.from_coo(rows, cols, vals, shape, block_size=B,
+                           val_dtype=np.float64 if vbytes == 8 else np.float32,
+                           use_column_aggregation=use_colagg)
+    base_pack = 0
+    base_x = len(cb.packed)
+    out = []
+    from repro.core.aggregation import unpack_block
+    from repro.core.formats import FMT_DENSE
+
+    # Walk blocks row-major: the locality claim is about the intra-block
+    # layout, not the balance permutation (which serves the *parallel*
+    # scheduler; a sequential LRU walk must not be charged for it).
+    order = np.lexsort((cb.blk_col_idx, cb.blk_row_idx))
+    for slot in order:
+        nnz = int(cb.nnz_per_blk[slot])
+        if nnz == 0:
+            continue
+        vp = int(cb.vp_per_blk[slot])
+        fmt = int(cb.type_per_blk[slot])
+        # one sequential walk of the block's contiguous packed region (VP)
+        if fmt == FMT_DENSE:
+            span = B * B * vbytes
+        else:
+            span = nnz * (1 + vbytes) + vbytes  # coords + pad + values
+        out.append(
+            _lines(base_pack, vp + np.arange(0, span, 16, dtype=np.int64))
+        )
+        # x accesses for this block
+        brow = int(cb.blk_row_idx[slot])
+        bcol = int(cb.blk_col_idx[slot])
+        r, c, v = unpack_block(cb.packed, vp, fmt, nnz,
+                               cb.block_size, cb.val_dtype)
+        gx = cb.global_x_index(brow, bcol, c)
+        out.append(_lines(base_x, gx * vbytes))
+    return np.concatenate(out), base_x + shape[1] * vbytes
+
+
+# ---------------------------------------------------------------------------
+# LRU cache simulator
+# ---------------------------------------------------------------------------
+
+def lru_hit_rate(line_stream: np.ndarray, cache_bytes: int) -> float:
+    """Fully-associative LRU over cache lines — the locality model."""
+    from collections import OrderedDict
+
+    capacity = max(1, cache_bytes // LINE)
+    cache: OrderedDict[int, None] = OrderedDict()
+    hits = 0
+    for line in line_stream.tolist():
+        if line in cache:
+            cache.move_to_end(line)
+            hits += 1
+        else:
+            cache[line] = None
+            if len(cache) > capacity:
+                cache.popitem(last=False)
+    return hits / max(1, len(line_stream))

@@ -1,0 +1,39 @@
+"""Benchmark driver: one section per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale small|bench]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["small", "bench"])
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig9,fig10,fig11,fig12,fig34")
+    args = ap.parse_args()
+
+    from . import fig9_perf, fig10_locality, fig11_ablation, fig12_overhead
+    from . import fig34_distribution
+
+    sections = {
+        "fig9": ("Fig. 9 — SpMV perf vs CSR/COO/BSR", fig9_perf.main),
+        "fig10": ("Fig. 10 — cache hit-rate model", fig10_locality.main),
+        "fig11": ("Fig. 11 — ablation CB-I/II/III", fig11_ablation.main),
+        "fig12": ("Fig. 12 — storage + preprocessing", fig12_overhead.main),
+        "fig34": ("Fig. 3/4 — distribution + balance", fig34_distribution.main),
+    }
+    chosen = args.only.split(",") if args.only else list(sections)
+    for key in chosen:
+        title, fn = sections[key]
+        print(f"\n===== {title} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"[{key} done in {time.time() - t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

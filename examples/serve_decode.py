@@ -1,0 +1,51 @@
+"""Serve a small LM with batched requests through the continuous-batching
+engine — decode is the SpMV-shaped regime the paper targets.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", family="dense",
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=1024, vocab_size=8192, remat="none", attn_chunk=128,
+        sparse_mlp=True, sparse_block=32, sparse_keep=0.5,
+    )
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"CB-sparse MLPs (keep={cfg.sparse_keep})")
+
+    engine = ServingEngine(model, params, slots=8, max_len=128)
+    rng = np.random.default_rng(0)
+    n_requests = 24
+    for uid in range(n_requests):
+        plen = int(rng.integers(2, 16))
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 20)),
+        ))
+
+    t0 = time.monotonic()
+    done = engine.run_until_done()
+    dt = time.monotonic() - t0
+    tokens = sum(len(r.generated) for r in done)
+    print(f"{len(done)}/{n_requests} requests served, {tokens} tokens in "
+          f"{engine.ticks} ticks, {dt:.1f}s ({tokens / dt:.1f} tok/s, "
+          f"continuous batching over 8 slots)")
+    for r in sorted(done, key=lambda r: r.uid)[:3]:
+        print(f"  req {r.uid}: {len(r.generated)} tokens -> {r.generated[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

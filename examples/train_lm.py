@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-param LM with CB block-sparse MLPs for
+a few hundred steps on the synthetic stream, with checkpointing and fault
+monitoring — the paper's technique as a first-class training feature.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.models import Model
+from repro.runtime import HeartbeatMonitor
+from repro.training import TrainLoopConfig, run_training
+
+
+def build_config(sparse: bool) -> ModelConfig:
+    # ~100M params: 12L x 512d x 2048ff, 32k vocab
+    return ModelConfig(
+        name="lm100m-cb" if sparse else "lm100m",
+        family="dense",
+        num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+        d_ff=2048, vocab_size=32_000,
+        sparse_mlp=sparse, sparse_block=64, sparse_keep=0.5,
+        remat="none", attn_chunk=256, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dense", action="store_true",
+                    help="baseline without CB sparsity")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = build_config(sparse=not args.dense)
+    model = Model(cfg)
+    n_params = cfg.param_count()
+    print(f"config: {cfg.name}  ~{n_params / 1e6:.0f}M params "
+          f"(sparse_mlp={cfg.sparse_mlp})")
+
+    stream = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+    ))
+    ck = Checkpointer(f"checkpoints/{cfg.name}")
+    monitor = HeartbeatMonitor(num_hosts=1)
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        checkpoint_every=max(50, args.steps // 4),
+        log_every=max(10, args.steps // 20),
+        peak_lr=6e-4, warmup_steps=30,
+    )
+    state, history = run_training(model, stream, loop,
+                                  checkpointer=ck, monitor=monitor)
+    ck.wait()
+    print(f"step {history[0]['step']}: loss {history[0]['loss']:.3f}")
+    print(f"step {history[-1]['step']}: loss {history[-1]['loss']:.3f}")
+    dloss = history[0]["loss"] - history[-1]["loss"]
+    print(f"loss improved by {dloss:.3f} over {args.steps} steps "
+          f"({'OK' if dloss > 0 else 'NOT LEARNING'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Intra-block data aggregation (paper §3.2, Fig. 7).
+
+All of a sub-block's data — packed coordinates and values, of different
+dtypes — is serialized into ONE contiguous byte region of a single flat
+uint8 buffer (``mtx_data`` in the paper). A *virtual pointer* per block
+(``vp_per_blk``) records the region's start offset; on-device access is by
+pointer offset only, so a block is fetched with one sequential read.
+
+Faithful details preserved from the paper:
+  * 16x16 coordinates pack into a single uint8: ``byte = col << 4 | row``
+    (Alg. 3 decodes ``row = b & 15; col = b >> 4``). Larger blocks use a
+    uint16 with the same ``col << bits | row`` layout.
+  * Alignment padding between the coordinate section and the value section:
+    ``padding = (-idx_bytes) % sizeof(val)`` (Alg. 3 lines 6-7), plus each
+    block region starts on a ``sizeof(val)``-aligned boundary so that the
+    value pointer arithmetic is alignment-safe (Fig. 7(b)).
+  * COO / CSR / Dense intra-block layouts, selected per block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .formats import FMT_COO, FMT_CSR, FMT_DENSE
+
+
+def coord_bits(block_size: int) -> int:
+    return max(1, (block_size - 1).bit_length())
+
+
+def coord_dtype(block_size: int) -> np.dtype:
+    """uint8 when row+col nibbles fit (B<=16), else uint16 (B<=256)."""
+    bits = coord_bits(block_size)
+    if 2 * bits <= 8:
+        return np.dtype(np.uint8)
+    if 2 * bits <= 16:
+        return np.dtype(np.uint16)
+    raise ValueError(f"block_size {block_size} too large for packed coordinates")
+
+
+def encode_coords(local_rows: np.ndarray, local_cols: np.ndarray, block_size: int) -> np.ndarray:
+    bits = coord_bits(block_size)
+    dt = coord_dtype(block_size)
+    packed = (local_cols.astype(np.uint32) << bits) | local_rows.astype(np.uint32)
+    return packed.astype(dt)
+
+
+def decode_coords(packed: np.ndarray, block_size: int) -> tuple[np.ndarray, np.ndarray]:
+    bits = coord_bits(block_size)
+    mask = (1 << bits) - 1
+    p = packed.astype(np.uint32)
+    return (p & mask).astype(np.int32), (p >> bits).astype(np.int32)
+
+
+def _align(offset: int, alignment: int) -> int:
+    return offset + (-offset) % alignment
+
+
+def _csr_rowptr_dtype(block_size: int) -> np.dtype:
+    # B*B max nnz: 256 for B=16 needs uint16; 16384 for B=128 also uint16.
+    return np.dtype(np.uint16) if block_size * block_size <= 0xFFFF else np.dtype(np.uint32)
+
+
+def pack_block(
+    fmt: int,
+    local_rows: np.ndarray,
+    local_cols: np.ndarray,
+    values: np.ndarray,
+    block_size: int,
+) -> np.ndarray:
+    """Serialize one sub-block into a uint8 byte string (no leading pad)."""
+    B = block_size
+    val = np.ascontiguousarray(values)
+    vsize = val.dtype.itemsize
+    if fmt == FMT_DENSE:
+        tile = np.zeros((B, B), dtype=val.dtype)
+        tile[local_rows, local_cols] = val
+        return tile.reshape(-1).view(np.uint8).copy()
+    if fmt == FMT_COO:
+        idx = encode_coords(local_rows, local_cols, B)
+        idx_bytes = idx.view(np.uint8)
+        pad = (-len(idx_bytes)) % vsize
+        return np.concatenate(
+            [idx_bytes, np.zeros(pad, np.uint8), val.view(np.uint8)]
+        )
+    if fmt == FMT_CSR:
+        # Elements arrive row-major (blocking.partition_coo guarantees it).
+        rp_dt = _csr_rowptr_dtype(B)
+        row_ptr = np.zeros(B + 1, dtype=np.int64)
+        np.add.at(row_ptr, local_rows.astype(np.int64) + 1, 1)
+        row_ptr = np.cumsum(row_ptr).astype(rp_dt)
+        cols = local_cols.astype(coord_dtype(B))
+        head = np.concatenate([row_ptr.view(np.uint8), cols.view(np.uint8)])
+        pad = (-len(head)) % vsize
+        return np.concatenate([head, np.zeros(pad, np.uint8), val.view(np.uint8)])
+    raise ValueError(f"unknown format {fmt}")
+
+
+def unpack_block(
+    buf: np.ndarray,
+    vp: int,
+    fmt: int,
+    nnz: int,
+    block_size: int,
+    val_dtype: np.dtype,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Inverse of pack_block: returns (local_rows, local_cols, values)."""
+    B = block_size
+    vsize = np.dtype(val_dtype).itemsize
+    if fmt == FMT_DENSE:
+        nbytes = B * B * vsize
+        tile = buf[vp : vp + nbytes].view(val_dtype).reshape(B, B)
+        r, c = np.nonzero(tile)
+        return r.astype(np.int32), c.astype(np.int32), tile[r, c]
+    if fmt == FMT_COO:
+        idx_nbytes = nnz * coord_dtype(B).itemsize
+        idx = buf[vp : vp + idx_nbytes].view(coord_dtype(B))
+        pad = (-idx_nbytes) % vsize
+        voff = vp + idx_nbytes + pad
+        vals = buf[voff : voff + nnz * vsize].view(val_dtype)
+        r, c = decode_coords(idx, B)
+        return r, c, vals
+    if fmt == FMT_CSR:
+        rp_dt = _csr_rowptr_dtype(B)
+        rp_nbytes = (B + 1) * rp_dt.itemsize
+        row_ptr = buf[vp : vp + rp_nbytes].view(rp_dt).astype(np.int64)
+        cdt = coord_dtype(B)
+        coff = vp + rp_nbytes
+        cols = buf[coff : coff + nnz * cdt.itemsize].view(cdt).astype(np.int32)
+        head = rp_nbytes + nnz * cdt.itemsize
+        pad = (-head) % vsize
+        voff = vp + head + pad
+        vals = buf[voff : voff + nnz * vsize].view(val_dtype)
+        rows = np.repeat(np.arange(B, dtype=np.int32), np.diff(row_ptr))
+        return rows, cols, vals
+    raise ValueError(f"unknown format {fmt}")
+
+
+@dataclasses.dataclass
+class PackedBlocks:
+    """The aggregated single-buffer representation (``mtx_data`` + VPs)."""
+
+    packed: np.ndarray        # (total_bytes,) uint8
+    vp_per_blk: np.ndarray    # (nblk,) int64 byte offsets
+    nbytes_per_blk: np.ndarray  # (nblk,) int64
+
+
+def aggregate_blocks(
+    fmts: np.ndarray,
+    block_elems: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+    block_size: int,
+    val_dtype: np.dtype,
+    alignment: int | None = None,
+) -> PackedBlocks:
+    """Pack every block back-to-back into one flat uint8 buffer.
+
+    Each block's region starts on an ``alignment``-aligned boundary
+    (default: value dtype size, min 4) — the Fig. 7(b) padding strategy.
+    """
+    vsize = np.dtype(val_dtype).itemsize
+    align = alignment or max(vsize, 4)
+    chunks: list[np.ndarray] = []
+    vps = np.zeros(len(block_elems), dtype=np.int64)
+    sizes = np.zeros(len(block_elems), dtype=np.int64)
+    off = 0
+    for i, (r, c, v) in enumerate(block_elems):
+        blob = pack_block(int(fmts[i]), r, c, v.astype(val_dtype), block_size)
+        start = _align(off, align)
+        if start != off:
+            chunks.append(np.zeros(start - off, np.uint8))
+        vps[i] = start
+        sizes[i] = len(blob)
+        chunks.append(blob)
+        off = start + len(blob)
+    packed = np.concatenate(chunks) if chunks else np.zeros(0, np.uint8)
+    return PackedBlocks(packed=packed, vp_per_blk=vps, nbytes_per_blk=sizes)

@@ -1,0 +1,114 @@
+"""Inter-thread-block load balancing (paper §3.4, Alg. 2).
+
+A min-heap keyed on accumulated nnz assigns sub-blocks (largest first) to
+(thread-block, warp-slot) pairs so every thread block processes the same
+NUMBER of sub-blocks while the total NNZ per thread block is near-equal.
+The block-COO high-level metadata then gets permuted once — enabled by the
+independence property of the 2D structure.
+
+Two deployments of the same algorithm:
+
+  * ``tb_load_balance``     — the paper's: slots = thread blocks x warps.
+    On TPU we reuse it to order a kernel's sequential grid into equal-nnz
+    work groups (keeps DMA queue depth even) and to pick megacore halves.
+  * ``device_load_balance`` — scaled up: slots = devices in the ``model``
+    axis of the mesh; used by core/distributed.py to shard the matrix with
+    near-equal nnz AND equal block count per device (equal block count ==
+    uniform shard shapes, which shard_map requires anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BalanceResult:
+    """Permutation produced by the balancer.
+
+    ``slots[s]`` = original block index occupying slot ``s`` (or -1 pad).
+    ``perm`` = slots with -1 kept (length = num_groups * group_size).
+    ``group_loads[g]`` = total nnz assigned to group g.
+    """
+
+    slots: np.ndarray
+    group_loads: np.ndarray
+    num_groups: int
+    group_size: int
+
+    @property
+    def load_std(self) -> float:
+        return float(np.std(self.group_loads))
+
+    @property
+    def load_imbalance(self) -> float:
+        """max/mean load ratio (1.0 = perfect)."""
+        mean = self.group_loads.mean() if len(self.group_loads) else 0.0
+        return float(self.group_loads.max() / mean) if mean > 0 else 1.0
+
+
+def _heap_assign(nnz_per_blk: np.ndarray, num_groups: int, group_size: int) -> BalanceResult:
+    """Alg. 2: sort desc by nnz; repeatedly give next block to the least
+    loaded group that still has a free slot."""
+    nblk = len(nnz_per_blk)
+    order = np.argsort(-np.asarray(nnz_per_blk, dtype=np.int64), kind="stable")
+    slots = np.full(num_groups * group_size, -1, dtype=np.int64)
+    loads = np.zeros(num_groups, dtype=np.int64)
+    # heap entries: (load, group_id, used_slots)
+    heap: list[list[int]] = [[0, g, 0] for g in range(num_groups)]
+    heapq.heapify(heap)
+    for blk in order:
+        top = heapq.heappop(heap)
+        load, gid, used = top
+        slots[gid * group_size + used] = blk
+        loads[gid] = load + int(nnz_per_blk[blk])
+        if used + 1 < group_size:
+            heapq.heappush(heap, [int(loads[gid]), gid, used + 1])
+    return BalanceResult(slots=slots, group_loads=loads, num_groups=num_groups, group_size=group_size)
+
+
+def tb_load_balance(nnz_per_blk: np.ndarray, warps_per_tb: int = 8) -> BalanceResult:
+    """Paper Alg. 2: one warp per sub-block, ``warps_per_tb`` warps per TB."""
+    nblk = len(nnz_per_blk)
+    num_tb = max(1, -(-nblk // warps_per_tb))
+    return _heap_assign(nnz_per_blk, num_tb, warps_per_tb)
+
+
+def device_load_balance(nnz_per_blk: np.ndarray, num_devices: int) -> BalanceResult:
+    """Equal block count + near-equal nnz per device (uniform shard shapes)."""
+    nblk = len(nnz_per_blk)
+    per_dev = max(1, -(-nblk // num_devices))
+    return _heap_assign(nnz_per_blk, num_devices, per_dev)
+
+
+def apply_balance(result: BalanceResult, *metadata: np.ndarray, pad_values=None):
+    """Permute parallel metadata arrays into slot order.
+
+    Empty slots get ``pad_values[k]`` (default 0). Returns a tuple of
+    arrays of length num_groups * group_size.
+    """
+    out = []
+    for k, arr in enumerate(metadata):
+        pad = 0 if pad_values is None else pad_values[k]
+        dest = np.full(len(result.slots), pad, dtype=np.asarray(arr).dtype)
+        mask = result.slots >= 0
+        dest[mask] = np.asarray(arr)[result.slots[mask]]
+        out.append(dest)
+    return tuple(out)
+
+
+def tb_load_stddev(nnz_per_blk: np.ndarray, blk_row_idx: np.ndarray | None = None,
+                   warps_per_tb: int = 8) -> tuple[float, float]:
+    """Fig. 4 metric: stddev of per-TB nnz before (naive block order) and
+    after pq balancing."""
+    nblk = len(nnz_per_blk)
+    if nblk == 0:
+        return 0.0, 0.0
+    num_tb = -(-nblk // warps_per_tb)
+    padded = np.zeros(num_tb * warps_per_tb, dtype=np.int64)
+    padded[:nblk] = nnz_per_blk
+    naive = padded.reshape(num_tb, warps_per_tb).sum(axis=1)
+    balanced = tb_load_balance(nnz_per_blk, warps_per_tb).group_loads
+    return float(np.std(naive)), float(np.std(balanced))

@@ -1,0 +1,186 @@
+"""CBMatrix — the end-to-end CB-SpMV data structure (paper Fig. 5 / Fig. 6).
+
+Conversion pipeline (COO input -> CB structure), exactly the paper's flow:
+
+  1. load block-based COO           (blocking.partition_coo)
+  2. matrix characteristics check   (formats.should_column_aggregate, th0)
+  3. block-aware column aggregation (column_agg.column_aggregate)
+  4. 2D structure + format select   (formats.select_formats, th1/th2)
+  5. intra-block data aggregation   (aggregation.aggregate_blocks -> VP)
+  6. inter-TB load balance          (balance.tb_load_balance, Alg. 2)
+
+The resulting object holds the high-level block-COO metadata in *balanced
+slot order* plus the single packed byte buffer — the faithful portable
+format. Kernel-facing typed streams are derived by core/streams.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import aggregation, balance, blocking, column_agg, formats
+
+
+@dataclasses.dataclass
+class CBMatrix:
+    shape: tuple[int, int]
+    block_size: int
+    val_dtype: np.dtype
+    thresholds: formats.FormatThresholds
+
+    # High-level block-COO metadata, in balanced slot order (padded with
+    # empty slots so every group holds exactly `group_size` blocks).
+    blk_row_idx: np.ndarray    # (nslots,) int32 — block-row (panel) index
+    blk_col_idx: np.ndarray    # (nslots,) int32 — block-col in (compacted) space
+    nnz_per_blk: np.ndarray    # (nslots,) int32 — 0 for pad slots
+    type_per_blk: np.ndarray   # (nslots,) uint8
+    vp_per_blk: np.ndarray     # (nslots,) int64 byte offsets (0 for pads)
+
+    packed: np.ndarray         # (total_bytes,) uint8 — ``mtx_data``
+    colagg: column_agg.ColumnAggregation
+    balance_result: balance.BalanceResult
+    nnz: int
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_coo(
+        cls,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: tuple[int, int],
+        block_size: int = 16,
+        val_dtype=np.float32,
+        thresholds: formats.FormatThresholds = formats.DEFAULT_THRESHOLDS,
+        use_column_aggregation: bool | str = "auto",
+        warps_per_tb: int = 8,
+    ) -> "CBMatrix":
+        val_dtype = np.dtype(val_dtype)
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, dtype=val_dtype)
+
+        # (1)+(2): probe partition to decide column aggregation (th0 gate).
+        probe = blocking.partition_coo(rows, cols, vals, shape, block_size)
+        if use_column_aggregation == "auto":
+            apply_agg = formats.should_column_aggregate(
+                probe.nnz_per_blk, block_size, thresholds
+            )
+        else:
+            apply_agg = bool(use_column_aggregation)
+
+        # (3): panel-level column compaction.
+        if apply_agg:
+            agg = column_agg.column_aggregate(rows, cols, shape, block_size)
+            part = blocking.partition_coo(rows, agg.new_cols, vals, shape, block_size)
+        else:
+            agg = column_agg.identity_aggregation(cols, shape, block_size)
+            part = probe
+
+        # (4): per-block format selection.
+        fmts = formats.select_formats(part.nnz_per_blk, block_size, thresholds)
+
+        # (5): intra-block aggregation into the flat buffer + VPs.
+        elems = [part.block_elems(i) for i in range(part.num_blocks)]
+        packed = aggregation.aggregate_blocks(fmts, elems, block_size, val_dtype)
+
+        # (6): inter-TB load balance (Alg. 2) and metadata permutation.
+        bal = balance.tb_load_balance(part.nnz_per_blk, warps_per_tb)
+        brow, bcol, nnzb, typb, vps = balance.apply_balance(
+            bal,
+            part.blk_row_idx,
+            part.blk_col_idx,
+            part.nnz_per_blk,
+            fmts,
+            packed.vp_per_blk,
+            pad_values=(0, 0, 0, formats.FMT_COO, 0),
+        )
+
+        return cls(
+            shape=tuple(shape),
+            block_size=block_size,
+            val_dtype=val_dtype,
+            thresholds=thresholds,
+            blk_row_idx=brow,
+            blk_col_idx=bcol,
+            nnz_per_blk=nnzb,
+            type_per_blk=typb,
+            vp_per_blk=vps,
+            packed=packed.packed,
+            colagg=agg,
+            balance_result=bal,
+            nnz=part.nnz,
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return int(np.sum(self.nnz_per_blk > 0))
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.blk_row_idx)
+
+    def iter_blocks(self):
+        """Yield (brow, bcol, fmt, local_r, local_c, vals) for real blocks."""
+        for i in range(self.num_slots):
+            nnz = int(self.nnz_per_blk[i])
+            if nnz == 0:
+                continue
+            fmt = int(self.type_per_blk[i])
+            r, c, v = aggregation.unpack_block(
+                self.packed, int(self.vp_per_blk[i]), fmt, nnz,
+                self.block_size, self.val_dtype,
+            )
+            yield int(self.blk_row_idx[i]), int(self.blk_col_idx[i]), fmt, r, c, v
+
+    def global_x_index(self, brow: int, bcol: int, local_c: np.ndarray) -> np.ndarray:
+        """Map (block, local col) -> original global column of x."""
+        B = self.block_size
+        if not self.colagg.applied:
+            return bcol * B + local_c.astype(np.int64)
+        base = self.colagg.cols_offset[brow] + bcol * B
+        return self.colagg.restore_cols[base + local_c.astype(np.int64)].astype(np.int64)
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=self.val_dtype)
+        B = self.block_size
+        for brow, bcol, fmt, r, c, v in self.iter_blocks():
+            gc = self.global_x_index(brow, bcol, c)
+            np.add.at(out, (brow * B + r, gc), v)
+        return out
+
+    # -- storage accounting (paper §4.4.1) ------------------------------
+    def nbytes_structure(self) -> dict:
+        meta = (
+            self.blk_row_idx.nbytes
+            + self.blk_col_idx.nbytes
+            + self.nnz_per_blk.nbytes
+            + self.type_per_blk.nbytes
+            + self.vp_per_blk.nbytes
+        )
+        agg = self.colagg.restore_cols.nbytes + self.colagg.cols_offset.nbytes
+        return {
+            "high_level_metadata": int(meta),
+            "column_agg_maps": int(agg) if self.colagg.applied else 0,
+            "packed_data": int(self.packed.nbytes),
+            "total": int(meta + self.packed.nbytes + (agg if self.colagg.applied else 0)),
+        }
+
+    def stats(self) -> dict:
+        real = self.nnz_per_blk[self.nnz_per_blk > 0]
+        fmt = self.type_per_blk[self.nnz_per_blk > 0]
+        return {
+            "nnz": self.nnz,
+            "num_blocks": int(len(real)),
+            "block_size": self.block_size,
+            "column_aggregated": bool(self.colagg.applied),
+            "fmt_coo": int(np.sum(fmt == formats.FMT_COO)),
+            "fmt_csr": int(np.sum(fmt == formats.FMT_CSR)),
+            "fmt_dense": int(np.sum(fmt == formats.FMT_DENSE)),
+            "super_sparse_fraction": formats.super_sparse_fraction(real, self.block_size),
+            "tb_load_std": self.balance_result.load_std,
+            "tb_load_imbalance": self.balance_result.load_imbalance,
+        }

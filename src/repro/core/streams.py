@@ -1,0 +1,287 @@
+"""Kernel-facing typed streams derived from the portable CB format.
+
+The portable ``CBMatrix`` stores mixed-dtype byte-packed blocks behind
+virtual pointers (paper Fig. 7). Mosaic DMAs are typed, so the TPU kernels
+consume *typed streams*: one stream per storage format, each a struct of
+uniform arrays where block ``i`` owns row ``i`` of every array. Contiguity
+— the actual locality mechanism of the paper — is preserved: a block's
+payload occupies one contiguous row of the stream, fetched with a single
+sequential HBM->VMEM DMA per grid step.
+
+Three streams mirror the paper's three intra-block formats:
+
+  * ``dense``  — (B, B) value tiles (FMT_DENSE blocks), MXU/VPU path.
+  * ``panel``  — (B, K) column-compacted micro-panels (FMT_CSR blocks):
+                 the block's non-zero columns are packed left, K padded to
+                 a sublane multiple. This is the per-block analogue of the
+                 paper's column aggregation — dense math on compacted data.
+  * ``coo``    — element lists with the paper's packed coordinates
+                 (``code = col << bits | row``), FMT_COO blocks.
+
+Every stream carries per-block x gather indices (``*_xidx``) that already
+encode the column-aggregation ``restore_cols`` mapping (or the trivial
+``bcol*B + j`` mapping), so kernels never consult the restore maps at run
+time — matching Alg. 3's precomputed ``cols_offset``/``restore_cols``
+lookups but resolved at preprocessing time where they are free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from . import column_agg as column_agg_mod
+from .cb_matrix import CBMatrix
+from .formats import FMT_COO, FMT_CSR, FMT_DENSE
+
+
+def _round_up(v: int, mult: int) -> int:
+    return max(mult, -(-v // mult) * mult)
+
+
+@dataclasses.dataclass
+class SpMVStreams:
+    """Typed per-format streams for the CB-SpMV kernels.
+
+    Array fields are jax/numpy arrays (pytree leaves); the ints are static
+    metadata. Block order within each stream is the balanced slot order of
+    the source ``CBMatrix`` — the kernels' scatter-add combine makes the
+    result independent of order, so the paper's load-balanced schedule is
+    kept verbatim.
+    """
+
+    # -- static ---------------------------------------------------------
+    block_size: int
+    m: int
+    n: int
+    mb: int               # number of block rows = ceil(m / B)
+    colagg_applied: bool
+    # -- dense tile stream ----------------------------------------------
+    dense_tiles: jax.Array   # (nd, B, B) val
+    dense_brow: jax.Array    # (nd,) int32
+    dense_bcol: jax.Array    # (nd,) int32 (compacted-space block col)
+    dense_xidx: jax.Array    # (nd, B) int32 global x index per tile column
+    # -- panel stream (CSR blocks, column-compacted) ---------------------
+    panel_vals: jax.Array    # (np_, B, Kp) val
+    panel_brow: jax.Array    # (np_,) int32
+    panel_xidx: jax.Array    # (np_, Kp) int32
+    # -- coo element stream ----------------------------------------------
+    coo_codes: jax.Array     # (nc, Ep) int32 packed (col << bits | row)
+    coo_vals: jax.Array      # (nc, Ep) val (0 on padding)
+    coo_brow: jax.Array      # (nc,) int32
+    coo_xidx: jax.Array      # (nc, Ep) int32
+
+    @property
+    def num_dense(self) -> int:
+        return self.dense_tiles.shape[0]
+
+    @property
+    def num_panel(self) -> int:
+        return self.panel_vals.shape[0]
+
+    @property
+    def num_coo(self) -> int:
+        return self.coo_codes.shape[0]
+
+    def device_put(self) -> "SpMVStreams":
+        return jax.tree_util.tree_map(jax.numpy.asarray, self)
+
+
+jax.tree_util.register_dataclass(
+    SpMVStreams,
+    data_fields=[
+        "dense_tiles", "dense_brow", "dense_bcol", "dense_xidx",
+        "panel_vals", "panel_brow", "panel_xidx",
+        "coo_codes", "coo_vals", "coo_brow", "coo_xidx",
+    ],
+    meta_fields=["block_size", "m", "n", "mb", "colagg_applied"],
+)
+
+
+def _block_x_indices(cb: CBMatrix, brow: int, bcol: int) -> np.ndarray:
+    """Global x index for each of the B columns of block (brow, bcol)."""
+    return column_agg_mod.restore_for_block(
+        cb.colagg, brow, bcol, cb.block_size, cb.shape[1]
+    ).astype(np.int32)
+
+
+def build_streams(cb: CBMatrix, coord_bits: int | None = None) -> SpMVStreams:
+    """Derive the typed kernel streams from a CBMatrix (host-side)."""
+    B = cb.block_size
+    bits = coord_bits or max(1, (B - 1).bit_length())
+    m, n = cb.shape
+    mb = -(-m // B)
+    vdt = cb.val_dtype
+
+    dense_tiles, dense_brow, dense_bcol, dense_xidx = [], [], [], []
+    panels: list[tuple[int, np.ndarray, np.ndarray]] = []  # (brow, panel, xidx)
+    coos: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
+
+    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
+        if fmt == FMT_DENSE:
+            tile = np.zeros((B, B), dtype=vdt)
+            tile[r, c] = v
+            dense_tiles.append(tile)
+            dense_brow.append(brow)
+            dense_bcol.append(bcol)
+            dense_xidx.append(_block_x_indices(cb, brow, bcol))
+        elif fmt == FMT_CSR:
+            ucols, rank = np.unique(c, return_inverse=True)
+            panel = np.zeros((B, len(ucols)), dtype=vdt)
+            panel[r, rank] = v
+            xidx = cb.global_x_index(brow, bcol, ucols).astype(np.int32)
+            panels.append((brow, panel, xidx))
+        elif fmt == FMT_COO:
+            codes = (c.astype(np.int64) << bits) | r.astype(np.int64)
+            xidx = cb.global_x_index(brow, bcol, c).astype(np.int32)
+            coos.append((brow, codes.astype(np.int32), v.astype(vdt), xidx))
+        else:  # pragma: no cover - format codes are exhaustive
+            raise ValueError(f"unknown format {fmt}")
+
+    # ---- dense stream ---------------------------------------------------
+    nd = len(dense_tiles)
+    d_tiles = np.stack(dense_tiles) if nd else np.zeros((0, B, B), vdt)
+    d_brow = np.asarray(dense_brow, np.int32)
+    d_bcol = np.asarray(dense_bcol, np.int32)
+    d_xidx = np.stack(dense_xidx).astype(np.int32) if nd else np.zeros((0, B), np.int32)
+
+    # ---- panel stream ---------------------------------------------------
+    np_ = len(panels)
+    Kp = _round_up(max((p.shape[1] for _, p, _ in panels), default=1), 8)
+    p_vals = np.zeros((np_, B, Kp), vdt)
+    p_brow = np.zeros(np_, np.int32)
+    p_xidx = np.zeros((np_, Kp), np.int32)
+    for i, (brow, panel, xidx) in enumerate(panels):
+        k = panel.shape[1]
+        p_vals[i, :, :k] = panel
+        p_brow[i] = brow
+        p_xidx[i, :k] = xidx
+
+    # ---- coo stream -----------------------------------------------------
+    nc = len(coos)
+    Ep = _round_up(max((len(v) for _, _, v, _ in coos), default=1), 8)
+    c_codes = np.zeros((nc, Ep), np.int32)
+    c_vals = np.zeros((nc, Ep), vdt)
+    c_brow = np.zeros(nc, np.int32)
+    c_xidx = np.zeros((nc, Ep), np.int32)
+    for i, (brow, codes, vals, xidx) in enumerate(coos):
+        e = len(vals)
+        c_codes[i, :e] = codes
+        c_vals[i, :e] = vals
+        c_brow[i] = brow
+        c_xidx[i, :e] = xidx
+
+    return SpMVStreams(
+        block_size=B, m=m, n=n, mb=mb, colagg_applied=cb.colagg.applied,
+        dense_tiles=d_tiles, dense_brow=d_brow, dense_bcol=d_bcol,
+        dense_xidx=d_xidx,
+        panel_vals=p_vals, panel_brow=p_brow, panel_xidx=p_xidx,
+        coo_codes=c_codes, coo_vals=c_vals, coo_brow=c_brow, coo_xidx=c_xidx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SpMM tile stream: block-dense weights for the training/prefill path.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TileStream:
+    """Block-dense (BSR-like) stream for CB-SpMM.
+
+    Blocks are sorted block-row-major and padded so that *every* block row
+    owns at least one (possibly all-zero) tile — the coverage requirement
+    of the kernel's output-revisiting accumulation (the TPU-deterministic
+    replacement for the paper's atomicAdd, DESIGN.md §2).
+    """
+
+    block_size: int
+    m: int
+    n: int
+    mb: int
+    nb: int
+    tiles: jax.Array   # (nt, B, B)
+    brow: jax.Array    # (nt,) int32, ascending
+    bcol: jax.Array    # (nt,) int32
+
+    @property
+    def num_tiles(self) -> int:
+        return self.tiles.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    TileStream,
+    data_fields=["tiles", "brow", "bcol"],
+    meta_fields=["block_size", "m", "n", "mb", "nb"],
+)
+
+
+def build_tile_stream(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    block_size: int,
+) -> TileStream:
+    """Build the block-dense stream directly from COO triplets."""
+    from .blocking import partition_coo
+
+    m, n = shape
+    B = block_size
+    mb, nb = -(-m // B), -(-n // B)
+    part = partition_coo(rows, cols, vals, shape, B)
+
+    tiles, brows, bcols = [], [], []
+    for i in range(part.num_blocks):
+        r, c, v = part.block_elems(i)
+        tile = np.zeros((B, B), dtype=v.dtype)
+        tile[r, c] = v
+        tiles.append(tile)
+        brows.append(int(part.blk_row_idx[i]))
+        bcols.append(int(part.blk_col_idx[i]))
+
+    # Coverage: every block row must own >= 1 tile (revisit init correctness).
+    present = set(brows)
+    for rb in range(mb):
+        if rb not in present:
+            tiles.append(np.zeros((B, B), dtype=vals.dtype))
+            brows.append(rb)
+            bcols.append(0)
+
+    order = np.argsort(np.asarray(brows), kind="stable")
+    tiles_arr = np.stack(tiles)[order] if tiles else np.zeros((0, B, B), vals.dtype)
+    return TileStream(
+        block_size=B, m=m, n=n, mb=mb, nb=nb,
+        tiles=tiles_arr,
+        brow=np.asarray(brows, np.int32)[order],
+        bcol=np.asarray(bcols, np.int32)[order],
+    )
+
+
+def tile_stream_from_cb(cb: CBMatrix) -> TileStream:
+    """Densify every CB block into the tile stream (all formats -> tiles).
+
+    Used when the SpMM path must run over a matrix preprocessed with the
+    full CB pipeline; x-index indirection (column aggregation) is folded
+    back to original coordinates so the stream is position-faithful.
+    """
+    B = cb.block_size
+    m, n = cb.shape
+    mb, nb = -(-m // B), -(-n // B)
+    acc: dict[tuple[int, int], np.ndarray] = {}
+    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
+        gc = cb.global_x_index(brow, bcol, c)
+        for rr, cc, vv in zip(r, gc, v):
+            key = (brow, int(cc) // B)
+            tile = acc.setdefault(key, np.zeros((B, B), dtype=cb.val_dtype))
+            tile[rr, int(cc) % B] += vv
+    for rb in range(mb):
+        if not any(k[0] == rb for k in acc):
+            acc[(rb, 0)] = np.zeros((B, B), dtype=cb.val_dtype)
+    keys = sorted(acc.keys())
+    return TileStream(
+        block_size=B, m=m, n=n, mb=mb, nb=nb,
+        tiles=np.stack([acc[k] for k in keys]),
+        brow=np.asarray([k[0] for k in keys], np.int32),
+        bcol=np.asarray([k[1] for k in keys], np.int32),
+    )

@@ -1,0 +1,1 @@
+from . import matrices, synthetic  # noqa: F401

@@ -1,0 +1,157 @@
+"""Synthetic sparse-matrix corpus generator.
+
+The paper evaluates on 2,843 SuiteSparse matrices. Offline we reproduce the
+*structural families* that collection spans — uniform random, power-law
+(graph-like), banded/FEM-like, block-clustered, and diagonal-dominant —
+so every benchmark sweeps matrices whose block-nnz distributions match the
+paper's Fig. 3 regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixSpec:
+    name: str
+    family: str
+    m: int
+    n: int
+    params: tuple = ()
+
+
+def _dedup(rows, cols, m, n, rng, vals=None):
+    key = rows.astype(np.int64) * n + cols
+    _, idx = np.unique(key, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+    if vals is None:
+        vals = rng.standard_normal(len(rows)).astype(np.float64)
+    else:
+        vals = vals[idx]
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def uniform_random(m, n, density, seed=0):
+    """Uniformly scattered non-zeros — the super-sparse COO regime."""
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(m * n * density))
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    return _dedup(rows, cols, m, n, rng)
+
+
+def power_law(m, n, avg_deg=8, alpha=2.1, seed=0):
+    """Graph-like rows: degree ~ Zipf; hub rows create dense blocks +
+    extreme TB load imbalance (the Fig. 4 regime)."""
+    rng = np.random.default_rng(seed)
+    deg = rng.zipf(alpha, size=m).astype(np.int64)
+    deg = np.minimum(deg * avg_deg // 2 + 1, n)
+    rows = np.repeat(np.arange(m, dtype=np.int64), deg)
+    # column popularity is itself power-law (preferential attachment)
+    popularity = (1.0 / np.arange(1, n + 1)) ** 0.7
+    popularity /= popularity.sum()
+    cols = rng.choice(n, size=len(rows), p=popularity)
+    return _dedup(rows, cols, m, n, rng)
+
+
+def banded(m, n, bandwidth=9, fill=0.7, seed=0):
+    """FEM/stencil-like band matrix — contiguous blocks, CSR/Dense regime."""
+    rng = np.random.default_rng(seed)
+    offs = np.arange(-(bandwidth // 2), bandwidth // 2 + 1)
+    rows = np.repeat(np.arange(m, dtype=np.int64), len(offs))
+    cols = rows + np.tile(offs, m)
+    keep = (cols >= 0) & (cols < n) & (rng.random(len(rows)) < fill)
+    return _dedup(rows[keep], cols[keep], m, n, rng)
+
+
+def block_clustered(m, n, cluster=48, clusters_per_row=3, density=0.85, seed=0):
+    """Dense clusters scattered on a sparse background (mixed regimes —
+    the torso1/exdata_1 style matrices the paper's ablation highlights)."""
+    rng = np.random.default_rng(seed)
+    rows_l, cols_l = [], []
+    n_row_clusters = max(1, m // cluster)
+    for rc in range(n_row_clusters):
+        r0 = rc * cluster
+        for _ in range(clusters_per_row):
+            c0 = int(rng.integers(0, max(1, n - cluster)))
+            mask = rng.random((min(cluster, m - r0), cluster)) < density
+            rr, cc = np.nonzero(mask)
+            rows_l.append(r0 + rr)
+            cols_l.append(c0 + cc)
+    # sparse background
+    bg = max(1, int(0.0005 * m * n))
+    rows_l.append(rng.integers(0, m, bg))
+    cols_l.append(rng.integers(0, n, bg))
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    return _dedup(rows, cols, m, n, rng)
+
+
+def diagonal_dominant(m, n, extra_density=0.001, seed=0):
+    rng = np.random.default_rng(seed)
+    d = min(m, n)
+    rows = [np.arange(d, dtype=np.int64)]
+    cols = [np.arange(d, dtype=np.int64)]
+    nnz = max(1, int(m * n * extra_density))
+    rows.append(rng.integers(0, m, nnz))
+    cols.append(rng.integers(0, n, nnz))
+    return _dedup(np.concatenate(rows), np.concatenate(cols), m, n, rng)
+
+
+def pruned_weight(m, n, block_size=16, block_sparsity=0.85, seed=0):
+    """Magnitude-pruned NN weight style: whole blocks zeroed, survivors
+    dense-ish — the regime CBSparseLinear sees in the LM integration."""
+    rng = np.random.default_rng(seed)
+    mb, nb = -(-m // block_size), -(-n // block_size)
+    alive = rng.random((mb, nb)) > block_sparsity
+    rr, cc = np.nonzero(alive)
+    rows_l, cols_l = [], []
+    for r0, c0 in zip(rr, cc):
+        h = min(block_size, m - r0 * block_size)
+        w = min(block_size, n - c0 * block_size)
+        mask = rng.random((h, w)) < 0.6
+        lr, lc = np.nonzero(mask)
+        rows_l.append(r0 * block_size + lr)
+        cols_l.append(c0 * block_size + lc)
+    if not rows_l:
+        rows_l, cols_l = [np.zeros(1, np.int64)], [np.zeros(1, np.int64)]
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    return _dedup(rows, cols, m, n, rng)
+
+
+FAMILIES = {
+    "uniform": uniform_random,
+    "power_law": power_law,
+    "banded": banded,
+    "block_clustered": block_clustered,
+    "diag": diagonal_dominant,
+    "pruned": pruned_weight,
+}
+
+
+def corpus(scale: str = "small", seed: int = 0):
+    """Yield (MatrixSpec, rows, cols, vals, shape) across all families.
+
+    scale='small' keeps preprocessing CPU-cheap for tests; 'bench' matches
+    the paper's >=1e5-nnz representative-matrix regime.
+    """
+    if scale == "small":
+        sizes = [(256, 256), (400, 320), (1024, 1024)]
+    elif scale == "bench":
+        sizes = [(4096, 4096), (8192, 8192), (16384, 16384)]
+    else:
+        raise ValueError(scale)
+    out = []
+    i = 0
+    for m, n in sizes:
+        for fam, fn in FAMILIES.items():
+            if fam == "uniform":
+                r, c, v = fn(m, n, density=0.002, seed=seed + i)
+            else:
+                r, c, v = fn(m, n, seed=seed + i)
+            out.append((MatrixSpec(f"{fam}_{m}x{n}", fam, m, n), r, c, v, (m, n)))
+            i += 1
+    return out

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: dense-tile CB-SpMV (paper Alg. 4, TPU-native).
+
+One grid step processes one FMT_DENSE sub-block: a (B, B) value tile
+multiplied by the B-wide slice of x it touches, producing a (B,) partial
+result tile. Partials are scatter-added into y by the jit'd wrapper
+(ops.cb_spmv) — the deterministic TPU replacement for Alg. 4's
+``atomicAdd`` (TPU has no atomics; XLA's sorted scatter-add is
+deterministic and the combine is order-independent, so the paper's
+load-balanced slot order is preserved).
+
+Two x-access paths, mirroring Alg. 4's two branches:
+
+  * no column aggregation  -> the x block at ``bcol`` is *scalar-prefetch
+    indexed*: the index map reads the prefetched ``bcol`` array so the
+    pipeline DMAs exactly the (1, B) slice of x into VMEM — the TPU
+    analogue of "preload x into shared memory".
+  * column aggregation     -> x was pre-gathered through ``restore_cols``
+    (XLA gather) and arrives as the (nd, B) ``xg`` operand — the analogue
+    of "load x from global memory via restore_cols".
+
+The warp-shuffle reduction of Alg. 4 becomes a VPU lane reduction inside
+``jnp.dot`` — the MXU/VPU native reduction (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_prefetched_x(bcol_ref, tiles_ref, x_ref, out_ref):
+    """x block arrives via scalar-prefetch-driven DMA (non-colagg path)."""
+    del bcol_ref  # consumed by the index map, not the body
+    tile = tiles_ref[0]                       # (B, B)
+    xb = x_ref[0]                             # (B,)
+    out_ref[0, :] = jnp.dot(
+        tile.astype(jnp.float32), xb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _kernel_gathered_x(tiles_ref, xg_ref, out_ref):
+    """x arrives pre-gathered per block (column-aggregation path)."""
+    tile = tiles_ref[0]
+    xb = xg_ref[0]
+    out_ref[0, :] = jnp.dot(
+        tile.astype(jnp.float32), xb.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_dense_spmv_prefetch(
+    tiles: jax.Array,      # (nd, B, B)
+    bcol: jax.Array,       # (nd,) int32
+    x_blocks: jax.Array,   # (nbc, B) — x reshaped into B-wide blocks
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-block partials, x fetched by scalar-prefetched block index."""
+    nd, B, _ = tiles.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i, bcol: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i, bcol: (bcol[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i, bcol: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_prefetched_x,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="cb_block_dense_spmv_prefetch",
+    )(bcol, tiles, x_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_dense_spmv_gathered(
+    tiles: jax.Array,   # (nd, B, B)
+    xg: jax.Array,      # (nd, B) pre-gathered x values
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-block partials, x pre-gathered (column-aggregation path)."""
+    nd, B, _ = tiles.shape
+    return pl.pallas_call(
+        _kernel_gathered_x,
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="cb_block_dense_spmv_gathered",
+    )(tiles, xg)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: column-compacted micro-panel CB-SpMV.
+
+FMT_CSR blocks (intermediate sparsity) become dense (B, K) panels after
+per-block column compaction — the TPU re-expression of the paper's
+block-aware column aggregation (§3.3.1): all-zero columns are dropped at
+preprocessing time so every VPU lane that loads data does useful work,
+the TPU analogue of the ">= 50% warp utilization" guarantee.
+
+One grid step = one panel: a (B, Kp) dense multiply against the Kp
+pre-gathered x values (gathered through ``restore_cols`` by XLA — the
+Alg. 3 colagg branch). Partials combine by scatter-add in ops.cb_spmv.
+
+The CSR row_ptr of the portable format is *dissolved* at preprocessing:
+rows are materialized into the panel's row axis, so the kernel needs no
+row decoding at all — row structure is positional, which is exactly what
+a systolic/vector unit wants (no indirection on the critical path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _panel_kernel(panel_ref, xg_ref, out_ref):
+    panel = panel_ref[0]   # (B, Kp)
+    xg = xg_ref[0]         # (Kp,)
+    out_ref[0, :] = jnp.dot(
+        panel.astype(jnp.float32), xg.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_spmv(
+    panels: jax.Array,  # (np_, B, Kp)
+    xg: jax.Array,      # (np_, Kp)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-panel partial y tiles — (np_, B) float32."""
+    np_, B, Kp = panels.shape
+    return pl.pallas_call(
+        _panel_kernel,
+        grid=(np_,),
+        in_specs=[
+            pl.BlockSpec((1, B, Kp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Kp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, B), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="cb_colagg_panel_spmv",
+    )(panels, xg)

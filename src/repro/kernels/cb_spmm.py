@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: CB-SpMM — block-sparse weights x dense activations.
+
+The training/prefill path of ``CBSparseLinear``: Y = A @ X with A a
+block-dense tile stream (B x B tiles at (brow, bcol)) and X dense (n, N).
+This is where the MXU earns its keep; SpMV (decode) is memory-bound, SpMM
+is compute-bound, so the adaptation goal flips from locality to MXU
+occupancy (DESIGN.md §2).
+
+Grid is (num_n_tiles, num_blocks) with the *block* dimension minor, so for
+a fixed activation tile j the kernel sweeps all weight tiles in
+block-row-major order. Output tile (brow[i], j) is therefore revisited in
+consecutive grid steps and accumulated in VMEM — the deterministic
+replacement for atomicAdd. The stream guarantees every block row owns at
+least one tile (build_tile_stream pads coverage), so every output tile is
+initialized.
+
+Scalar-prefetched ``brow``/``bcol`` drive the index maps: X tiles are
+DMA'd by ``bcol[i]`` and output tiles by ``brow[i]`` — the virtual-pointer
+idea (data location resolved from prefetched metadata, payload fetched
+with one sequential DMA) mapped onto Pallas's pipeline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(brow_ref, bcol_ref, tiles_ref, x_ref, out_ref):
+    del bcol_ref  # consumed by the X index map
+    i = pl.program_id(1)
+    # First visit of this output tile <=> first block of a block-row run.
+    is_first = (i == 0) | (brow_ref[i] != brow_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(is_first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = tiles_ref[0].astype(jnp.float32)   # (B, B)
+    xt = x_ref[0].astype(jnp.float32)         # (B, block_n)
+    out_ref[0] += jnp.dot(tile, xt, preferred_element_type=jnp.float32)
+
+
+def tile_spmm(
+    tiles: jax.Array,   # (nt, B, B) — block-row-major order, full row coverage
+    brow: jax.Array,    # (nt,) int32 ascending
+    bcol: jax.Array,    # (nt,) int32
+    Xb: jax.Array,      # (nb, B, N) — X reshaped into B-row blocks
+    mb: int,
+    *,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Y_blocks = A @ X as (mb, B, N) float32. N must divide by block_n."""
+    nt, B, _ = tiles.shape
+    _, _, N = Xb.shape
+    assert N % block_n == 0, (N, block_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N // block_n, nt),
+        in_specs=[
+            pl.BlockSpec((1, B, B), lambda j, i, brow, bcol: (i, 0, 0)),
+            pl.BlockSpec(
+                (1, B, block_n), lambda j, i, brow, bcol: (bcol[i], 0, j)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, B, block_n), lambda j, i, brow, bcol: (brow[i], 0, j)
+        ),
+    )
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb, B, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="cb_tile_spmm",
+    )(brow, bcol, tiles, Xb)

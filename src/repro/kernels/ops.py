@@ -1,0 +1,112 @@
+"""jit'd public entry points for the CB-SpMV / CB-SpMM kernels.
+
+``cb_spmv(streams, x)`` dispatches each per-format stream to its Pallas
+kernel (the paper's "segregated per-format streams" replacement for
+intra-kernel branching — TPU cores have no divergence mechanism, uniform
+kernels win) and combines partial block results with a single scatter-add.
+
+``impl`` selects between the Pallas kernels ("pallas", interpret=True on
+CPU; compiled Mosaic on TPU) and the pure-XLA reference ("reference",
+kernels/ref.py) — the reference path is what the multi-pod dry-run lowers,
+since Mosaic kernels cannot compile for the CPU stand-in devices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import SpMVStreams, TileStream
+
+from . import cb_block_dense, cb_colagg, cb_coo, ref
+from . import cb_spmm as _cb_spmm_kernel
+
+
+def _x_blocks(x: jax.Array, B: int, nbc: int) -> jax.Array:
+    """Reshape x into (nbc, B) blocks, zero-padding the ragged tail."""
+    pad = nbc * B - x.shape[0]
+    return jnp.pad(x, (0, pad)).reshape(nbc, B)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def cb_spmv(
+    streams: SpMVStreams,
+    x: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = A @ x over the CB streams. x: (n,) -> y: (m,) float32."""
+    if impl == "reference":
+        return ref.cb_spmv(streams, x)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    interp = (not _on_tpu()) if interpret is None else interpret
+
+    B, mb = streams.block_size, streams.mb
+    y = jnp.zeros((mb, B), jnp.float32)
+
+    if streams.num_dense:
+        if streams.colagg_applied:
+            part = cb_block_dense.block_dense_spmv_gathered(
+                streams.dense_tiles, x[streams.dense_xidx], interpret=interp
+            )
+        else:
+            nbc = -(-streams.n // B)
+            part = cb_block_dense.block_dense_spmv_prefetch(
+                streams.dense_tiles, streams.dense_bcol,
+                _x_blocks(x, B, nbc), interpret=interp,
+            )
+        y = y.at[streams.dense_brow].add(part)
+
+    if streams.num_panel:
+        part = cb_colagg.panel_spmv(
+            streams.panel_vals, x[streams.panel_xidx], interpret=interp
+        )
+        y = y.at[streams.panel_brow].add(part)
+
+    if streams.num_coo:
+        # The element stream always uses pre-gathered x: its xidx already
+        # folds colagg restore (or the trivial mapping), and per-element
+        # gathers are XLA's job either way (Alg. 3's d_x branch).
+        part = cb_coo.coo_spmv_gathered(
+            streams.coo_codes, streams.coo_vals, x[streams.coo_xidx],
+            block_size=B, interpret=interp,
+        )
+        y = y.at[streams.coo_brow].add(part)
+
+    return y.reshape(-1)[: streams.m]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_n"))
+def cb_spmm(
+    stream: TileStream,
+    X: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    block_n: int = 128,
+) -> jax.Array:
+    """Y = A @ X with A a block-dense tile stream. X: (n, N) -> Y: (m, N)."""
+    if impl == "reference":
+        return ref.cb_spmm(stream, X)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    interp = (not _on_tpu()) if interpret is None else interpret
+
+    B, mb, nb = stream.block_size, stream.mb, stream.nb
+    n, N = X.shape
+    bn = min(block_n, max(8, N))
+    Npad = -(-N // bn) * bn
+    Xp = jnp.pad(X, ((0, nb * B - n), (0, Npad - N)))
+    Xb = Xp.reshape(nb, B, Npad)
+    Yb = _cb_spmm_kernel.tile_spmm(
+        stream.tiles, stream.brow, stream.bcol, Xb, mb,
+        block_n=bn, interpret=interp,
+    )
+    return Yb.reshape(mb * B, Npad)[: stream.m, :N]

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, dry-run, train, serve."""
+from .mesh import make_production_mesh  # noqa: F401

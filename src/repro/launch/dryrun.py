@@ -1,0 +1,498 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first
+# initialization, and the dry-run (and ONLY the dry-run) needs 512
+# placeholder host devices to build the production mesh.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real step function (train_step with
+optimizer update / prefill forward / decode step) against ShapeDtypeStruct
+inputs under the production mesh, proving the sharding config is coherent
+end-to-end, then extracts:
+
+  * memory_analysis()  — per-device bytes (does it fit 16G HBM v5e)
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  * collective bytes   — parsed from the post-SPMD HLO text per op kind
+
+Results are printed and dumped as JSON under experiments/dryrun/ for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multipod both|single|multi]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs, supports_shape
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model, axis_rules, logical_to_sharding
+from repro.models.sharding import sanitize_shardings, spec_for
+from repro.training import build_train_step
+from repro.training.optimizer import adamw
+from repro.training.schedule import warmup_cosine
+from repro.training.train_state import TrainState
+
+from .mesh import make_production_mesh, rules_for
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per chip) — §Roofline
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_CURLY_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_CURLY_RE.search(line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device operand bytes of every collective in the compiled HLO.
+
+    Post-optimization HLO prints operands by name only, so per-op operand
+    bytes are derived from the RESULT shape and the replica-group size:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather:      operand = result / group_size
+      reduce-scatter:  operand = result * group_size
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            if f" {kind}(" not in line and f" {kind}-start(" not in line:
+                continue
+            # result shape: first dtype[dims] after "= " (tuples: sum parts)
+            eq = line.find("= ")
+            if eq < 0:
+                continue
+            op_pos = line.find(f" {kind}", eq)   # the op, not its %name
+            head = line[eq + 2 : op_pos]
+            result_bytes = sum(
+                _shape_bytes(m.group(1), m.group(2))
+                for m in _SHAPE_RE.finditer(head)
+                if m.group(1) in _DTYPE_BYTES
+            )
+            g = _group_size(line)
+            if kind == "all-gather":
+                op_bytes = result_bytes // max(1, g)
+            elif kind == "reduce-scatter":
+                op_bytes = result_bytes * g
+            else:
+                op_bytes = result_bytes
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += op_bytes
+            break
+    out["total_bytes"] = sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict)
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step construction per shape kind
+# ---------------------------------------------------------------------------
+
+def _batch_shardings(specs: dict, mesh, rules):
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "targets"):
+            axes = ("batch", "seq") if v.ndim == 2 else ("batch",)
+        elif k == "pos":
+            axes = ("batch",)
+        elif k == "patch_embeds":
+            axes = ("batch", "patches", "embed")
+        elif k == "frames":
+            axes = ("batch", "frames", "embed")
+        else:
+            axes = (None,) * v.ndim
+        out[k] = NamedSharding(mesh, spec_for(axes))
+    return out
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype
+        ),
+        tree,
+    )
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               extra_rules: dict | None = None):
+    """Returns (lower_fn) -> lowered for one dry-run cell."""
+    rules = rules_for(cfg, shape, mesh)
+    if extra_rules:
+        rules.update(extra_rules)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+
+    # NOTE: the returned lower() closures re-enter axis_rules — tracing
+    # happens at .lower() time, and constrain() must see the mesh then.
+    with axis_rules(mesh, rules):
+        param_shapes, axes = model.abstract_init(key)
+        param_sh = logical_to_sharding(axes, mesh, rules)
+        param_sh = sanitize_shardings(param_shapes, param_sh, mesh)
+        in_specs = input_specs(cfg, shape)
+        batch_sh = _batch_shardings(in_specs, mesh, rules)
+
+        if shape.kind == "train":
+            moments = (
+                jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32
+            )
+            optimizer = adamw(moments_dtype=moments)
+            lr_fn = warmup_cosine(3e-4, 100, 10_000)
+            step = build_train_step(model, optimizer, lr_fn)
+            state_shapes = jax.eval_shape(
+                lambda p: TrainState.create(p, optimizer), param_shapes
+            )
+            # moments follow the param shardings; step/count replicated
+            from repro.training.optimizer import AdamWState
+            rep = NamedSharding(mesh, P())
+            state_sh = TrainState(
+                step=rep, params=param_sh,
+                opt_state=AdamWState(mu=param_sh, nu=param_sh, count=rep),
+                ef_buffers=None,
+            )
+
+            def lower():
+                with axis_rules(mesh, rules):
+                    return jax.jit(
+                        step,
+                        in_shardings=(state_sh, batch_sh),
+                        out_shardings=(state_sh, None),
+                        donate_argnums=0,
+                    ).lower(state_shapes, in_specs)
+
+            return lower, model
+
+        # serving cells run bf16 params
+        serve_params = _cast_tree(param_shapes, jnp.bfloat16)
+
+        if shape.kind == "prefill":
+            def fwd(params, batch):
+                kw = {}
+                if cfg.family == "vlm":
+                    kw["patch_embeds"] = batch["patch_embeds"]
+                if cfg.family == "encdec":
+                    kw["frames"] = batch["frames"]
+                out = model.forward(params, batch["tokens"], last_only=True,
+                                    **kw)
+                return out.logits
+
+            def lower():
+                with axis_rules(mesh, rules):
+                    return jax.jit(
+                        fwd,
+                        in_shardings=(param_sh, batch_sh),
+                    ).lower(serve_params, in_specs)
+
+            return lower, model
+
+        # decode
+        state_shapes = jax.eval_shape(
+            lambda: model.init_decode_state(shape.global_batch, shape.seq_len)
+        )
+        state_axes = model.decode_state_axes()
+        state_sh = logical_to_sharding(state_axes, mesh, rules)
+        state_sh = sanitize_shardings(state_shapes, state_sh, mesh)
+
+        def decode(params, state, batch):
+            return model.decode_step(params, state, batch["tokens"],
+                                     batch["pos"])
+
+        def lower():
+            with axis_rules(mesh, rules):
+                return jax.jit(
+                    decode,
+                    in_shardings=(param_sh, state_sh, batch_sh),
+                    out_shardings=(None, state_sh),
+                    donate_argnums=1,
+                ).lower(serve_params, state_shapes, in_specs)
+
+        return lower, model
+
+
+# ---------------------------------------------------------------------------
+# cost probes — exact FLOPs/bytes/collectives despite scanned layers
+# ---------------------------------------------------------------------------
+# XLA's HLO cost analysis counts a while-loop body ONCE, not x trip count,
+# so the scanned production step under-reports layer costs. We therefore
+# compile small UNROLLED probes (2 and 4 layers, all scans unrolled) at the
+# full production shapes and extrapolate linearly: identical layers make
+# cost(L) = a + b*L exact. zamba2 has two layer species (mamba + shared
+# attn block), so it gets a third probe to separate the two slopes.
+
+def _probe_cfgs(cfg: ModelConfig) -> list[tuple[ModelConfig, dict]]:
+    base = cfg.scaled(scan_layers=False, attn_unroll=True)
+    if cfg.family == "hybrid":
+        return [
+            (base.scaled(num_layers=2, attn_every=1), {"m": 2, "s": 2}),
+            (base.scaled(num_layers=4, attn_every=1), {"m": 4, "s": 4}),
+            (base.scaled(num_layers=4, attn_every=2), {"m": 4, "s": 2}),
+        ]
+    if cfg.family == "encdec":
+        return [
+            (base.scaled(num_layers=2, encoder_layers=2), {"l": 2}),
+            (base.scaled(num_layers=4, encoder_layers=4), {"l": 4}),
+        ]
+    return [
+        (base.scaled(num_layers=2), {"l": 2}),
+        (base.scaled(num_layers=4), {"l": 4}),
+    ]
+
+
+def _extrapolate(cfg: ModelConfig, samples: list[tuple[dict, float]]) -> float:
+    """Solve the per-layer-species linear model and evaluate at full depth."""
+    if cfg.family == "hybrid":
+        (_, m1), (_, m2), (_, m3) = samples
+        bs = (m2 - m3) / 2.0
+        bm = (m2 - m1) / 2.0 - bs
+        a = m1 - 2 * bm - 2 * bs
+        n_shared = cfg.num_layers // cfg.attn_every
+        return a + cfg.num_layers * bm + n_shared * bs
+    (_, m1), (_, m2) = samples
+    l1, l2 = samples[0][0]["l"], samples[1][0]["l"]
+    # per-LAYER slope; grouped MoE (llama4) stays linear in layers because
+    # each group is a fixed layer bundle (2 layers incl. 1 MoE).
+    b = (m2 - m1) / (l2 - l1)
+    a = m1 - l1 * b
+    return a + cfg.num_layers * b
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                extra_rules: dict | None = None) -> dict:
+    """Compile unrolled probes and extrapolate per-device costs."""
+    samples = []
+    for pcfg, meta in _probe_cfgs(cfg):
+        lower, _ = build_cell(pcfg, shape, mesh, extra_rules)
+        compiled = lower().compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        coll = parse_collectives(compiled.as_text())
+        samples.append((meta, {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"]),
+        }))
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        series = [(m, v[key]) for m, v in samples]
+        out[key] = _extrapolate(cfg, series)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analysis
+# ---------------------------------------------------------------------------
+
+def analyze(compiled, mesh, cfg: ModelConfig, shape: ShapeConfig,
+            probe: dict | None = None) -> dict:
+    chips = mesh.size
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if probe is not None:
+        flops_dev = probe["flops"]
+        bytes_dev = probe["bytes"]
+    else:
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes", "peak_memory_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # CPU backend may not implement
+        mem["error"] = str(e)
+
+    coll = parse_collectives(compiled.as_text())
+    coll_dev = probe["coll"] if probe is not None else coll["total_bytes"]
+
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+    coll_global = coll_dev * chips
+
+    t_compute = flops_global / (chips * PEAK_FLOPS)
+    t_memory = bytes_global / (chips * HBM_BW)
+    t_coll = coll_global / (chips * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D for train (fwd+bwd), 2·N·D for single forward.
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+
+    return {
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "flops_global": flops_global,
+        "bytes_per_device": bytes_dev,
+        "bytes_global": bytes_global,
+        "collectives": coll,
+        "memory": mem,
+        "roofline": {
+            **terms,
+            "bottleneck": bottleneck.replace("_s", ""),
+            "model_flops": model_flops,
+            "useful_flops_ratio": (
+                model_flops / flops_global if flops_global else 0.0
+            ),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, extra_rules: dict | None = None,
+             cfg_override: ModelConfig | None = None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        cell["status"] = "skipped"
+        cell["reason"] = why
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}_{shape_name}_{mesh_name}.json"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(cell, f, indent=1)
+        return cell
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lower, _ = build_cell(cfg, shape, mesh, extra_rules)
+        lowered = lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        probe = probe_costs(cfg, shape, mesh, extra_rules)
+        cell.update(analyze(compiled, mesh, cfg, shape, probe=probe))
+        cell["status"] = "ok"
+        cell["lower_s"] = round(t_lower, 1)
+        cell["compile_s"] = round(t_compile, 1)
+        cell["probe_s"] = round(time.time() - t0 - t_lower - t_compile, 1)
+    except Exception as e:
+        cell["status"] = "FAILED"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(cell, f, indent=1)
+    return cell
+
+
+def _fmt_row(c: dict) -> str:
+    if c["status"] != "ok":
+        return (f"{c['arch']:26s} {c['shape']:12s} {c['mesh']:8s} "
+                f"{c['status']}: {c.get('reason', c.get('error', ''))[:80]}")
+    r = c["roofline"]
+    return (
+        f"{c['arch']:26s} {c['shape']:12s} {c['mesh']:8s} ok "
+        f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+        f"coll={r['collective_s']:.3e}s bound={r['bottleneck']:4s} "
+        f"useful={r['useful_flops_ratio']:.2f} "
+        f"[{c['compile_s']:.0f}s compile]"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+
+    archs = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = (
+        list(SHAPES) if args.all or args.shape is None else [args.shape]
+    )
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multipod
+    ]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                c = run_cell(arch, shape, mp, out_dir=args.out)
+                print(_fmt_row(c), flush=True)
+                results.append(c)
+    n_ok = sum(1 for c in results if c["status"] == "ok")
+    n_skip = sum(1 for c in results if c["status"] == "skipped")
+    n_fail = sum(1 for c in results if c["status"] == "FAILED")
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

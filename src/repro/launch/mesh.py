@@ -1,0 +1,79 @@
+"""Production mesh construction + logical-axis rule selection.
+
+``make_production_mesh`` is a FUNCTION (module import never touches jax
+device state). Single pod = (data=16, model=16) — 256 chips; multi-pod
+adds a leading ``pod`` axis (2 pods = 512 chips). ``pod`` is pure DP by
+default (weights replicated per pod, gradients summed across pods);
+launch/train.py can alternatively run GPipe stages over it
+(runtime/pipeline.py).
+
+``rules_for`` returns the logical->physical overrides per (cfg, shape):
+  * decode shapes with batch < data width: batch unsharded, KV cache
+    *sequence* sharded over model (flash-decoding style LSE combine is
+    inserted by GSPMD as partial-softmax reductions);
+  * small archs (whisper) replicate attention heads (TP over 16 chips of
+    a 12-head model is padding waste, not parallelism).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def data_width(mesh: jax.sharding.Mesh) -> int:
+    w = mesh.shape["data"]
+    if "pod" in mesh.shape:
+        w *= mesh.shape["pod"]
+    return w
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeConfig,
+              mesh: jax.sharding.Mesh) -> dict:
+    rules: dict = {}
+    dw = data_width(mesh)
+
+    if shape.kind == "decode":
+        # Decode caches dominate memory. Shard the cache SEQUENCE dim over
+        # the model axis (flash-decoding: GSPMD inserts the partial-softmax
+        # LSE combine) — kv-head sharding would replicate whenever
+        # kv_heads < TP width (GQA: 8 < 16), which is exactly the big-cache
+        # regime. Batch rides data when divisible (decode_32k), else the
+        # whole cache burden is on the seq shards (long_500k, batch 1).
+        rules["kv_seq"] = "model"
+        rules["kv"] = None
+        # heads replicated: if q-heads shard over model, GSPMD prefers
+        # h-parallel attention and ALL-GATHERS the seq-sharded cache each
+        # layer (measured: 2.2 GB/layer/device). Replicated heads keep the
+        # contraction s-parallel — the real flash-decoding schedule: cache
+        # stays sharded, only LSE-combine psums cross devices (§Perf C3).
+        rules["heads"] = None
+        if shape.global_batch % dw != 0:
+            rules["batch"] = None
+
+    if cfg.num_heads < mesh.shape["model"]:
+        # whisper (12 heads < 16): replicate heads, shard MLP only.
+        rules["heads"] = None
+        rules["kv"] = None
+
+    if cfg.family == "moe":
+        if cfg.num_experts % mesh.shape["model"] == 0:
+            pass  # EP (experts -> model), the default rule table
+        else:
+            # too few experts for the TP width (mixtral 8 < 16): replicate
+            # the expert axis and TP-shard inside each expert's FFN.
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    return rules

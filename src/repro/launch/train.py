@@ -1,0 +1,95 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the real training loop (synthetic token stream, checkpointing, fault
+monitoring) on whatever devices exist — a single CPU device locally, the
+production mesh on real pods. Mesh axes and logical rules come from
+launch/mesh.py; elasticity from runtime/elastic.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config, get_smoke_config
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.models import Model, axis_rules, logical_to_sharding
+from repro.models.sharding import sanitize_shardings
+from repro.runtime import HeartbeatMonitor, plan_mesh
+from repro.training import TrainLoopConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "lion"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n_dev = len(jax.devices())
+    plan = plan_mesh(n_dev, prefer_model=min(16, n_dev),
+                     global_batch=args.global_batch)
+    mesh = jax.make_mesh(
+        plan.shape, plan.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.shape),
+    )
+    print(f"mesh: {dict(zip(plan.axis_names, plan.shape))}  arch: {cfg.name}")
+
+    model = Model(cfg)
+    stream = SyntheticTokenStream(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                   global_batch=args.global_batch)
+    )
+    ck = Checkpointer(f"{args.ckpt_dir}/{cfg.name}")
+    monitor = HeartbeatMonitor(num_hosts=1)
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps,
+        microbatches=args.microbatches,
+        optimizer=args.optimizer,
+        compression=args.compression,
+        peak_lr=args.peak_lr,
+        checkpoint_every=max(10, args.steps // 4),
+        log_every=max(1, args.steps // 20),
+    )
+
+    initial_state = None
+    if args.resume and ck.latest_step() is not None:
+        from repro.training import OPTIMIZERS, TrainState
+
+        params, _ = model.init(jax.random.PRNGKey(0))
+        example = TrainState.create(
+            params, OPTIMIZERS[args.optimizer](),
+            use_compression=args.compression != "none",
+        )
+        initial_state = jax.tree_util.tree_map(
+            jnp.asarray, ck.restore(example)
+        )
+        print(f"resumed from step {int(initial_state.step)}")
+
+    with axis_rules(mesh):
+        state, history = run_training(
+            model, stream, loop_cfg,
+            checkpointer=ck, monitor=monitor, initial_state=initial_state,
+        )
+    ck.wait()
+    print("final:", history[-1])
+    if monitor.stragglers:
+        print(f"stragglers observed: {len(monitor.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model library: 10 assigned architectures over 6 families."""
+from .model import Model  # noqa: F401
+from .sharding import axis_rules, constrain, logical_to_sharding  # noqa: F401

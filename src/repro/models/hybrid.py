@@ -1,0 +1,228 @@
+"""Zamba2-style hybrid: Mamba2 trunk + weight-shared attention blocks.
+
+Every ``cfg.attn_every`` SSM layers, one *shared* transformer block
+(attention + SwiGLU) is applied; its weights are shared across all G
+invocations, specialized per invocation by low-rank LoRA deltas on the
+q/k/v projections (stacked (G, ...) — the zamba2 recipe, arXiv:2411.15242).
+The Mamba trunk is scanned in G equal slices; the G shared-block calls are
+unrolled (G is small).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import ssm as ssm_mod
+from .sharding import constrain
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    assert cfg.attn_every > 0 and cfg.num_layers % cfg.attn_every == 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def hybrid_axes(cfg: ModelConfig) -> dict:
+    prepend = lambda t: jax.tree_util.tree_map(
+        lambda a: ("w_layers",) + a, t,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    return {
+        "embed": ("vocab", "w_embed"),
+        "mamba": {
+            "mixer": prepend(ssm_mod.ssm_axes(cfg)),
+            "norm1": ("w_layers", "embed"),
+        },
+        "shared": {
+            "attn": L.attention_axes(cfg),
+            "mlp": L.mlp_axes(cfg.scaled(sparse_mlp=False)),
+            "norm1": ("embed",), "norm2": ("embed",),
+        },
+        "lora": {k: ("w_layers", None, None)
+                 for k in ("qa", "qb", "ka", "kb", "va", "vb")},
+        "final_norm": ("embed",),
+        "unembed": ("w_embed", "vocab"),
+    }
+
+
+def hybrid_init(key, cfg: ModelConfig, specs=None):
+    del specs
+    G = _num_groups(cfg)
+    d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    r = max(1, cfg.shared_attn_lora_rank)
+    ks = jax.random.split(key, 8)
+
+    embed, _ = L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model)
+    mamba_keys = jax.random.split(ks[1], cfg.num_layers)
+
+    def one_mamba(k):
+        p, _ = ssm_mod.ssm_init(k, cfg)
+        return {"mixer": p, "norm1": jnp.ones((d,), jnp.float32)}
+
+    mamba = jax.vmap(one_mamba)(mamba_keys)
+
+    p_attn, _ = L.attention_init(ks[2], cfg)
+    p_mlp, _, _ = L.mlp_init(ks[3], cfg.scaled(sparse_mlp=False))
+    shared = {
+        "attn": p_attn, "mlp": p_mlp,
+        "norm1": jnp.ones((d,), jnp.float32),
+        "norm2": jnp.ones((d,), jnp.float32),
+    }
+
+    lora = {
+        "qa": jax.random.normal(ks[4], (G, d, r), jnp.float32) * d**-0.5,
+        "qb": jnp.zeros((G, r, H * dh), jnp.float32),
+        "ka": jax.random.normal(ks[5], (G, d, r), jnp.float32) * d**-0.5,
+        "kb": jnp.zeros((G, r, Hkv * dh), jnp.float32),
+        "va": jax.random.normal(ks[6], (G, d, r), jnp.float32) * d**-0.5,
+        "vb": jnp.zeros((G, r, Hkv * dh), jnp.float32),
+    }
+
+    params = {
+        "embed": embed,
+        "mamba": mamba,
+        "shared": shared,
+        "lora": lora,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "unembed": jax.random.normal(ks[7], (d, cfg.padded_vocab), jnp.float32)
+        * d**-0.5,
+    }
+    return params, hybrid_axes(cfg), None
+
+
+def _shared_block(
+    params, lora_g, cfg: ModelConfig, h, positions, cache=None
+):
+    """The shared attention+MLP block with this invocation's LoRA delta."""
+    dt = h.dtype
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hn = L.rmsnorm(h, params["norm1"])
+
+    # LoRA deltas fold into the attention projections by pre-computing
+    # per-invocation effective weights (rank-r update; cheap at trace time).
+    def delta(a, b, h_out, heads):
+        return (a.astype(dt) @ b.astype(dt)).reshape(
+            cfg.d_model, heads, dh
+        )
+
+    attn_p = dict(params["attn"])
+    attn_p["wq"] = params["attn"]["wq"] + delta(lora_g["qa"], lora_g["qb"], None, H)
+    attn_p["wk"] = params["attn"]["wk"] + delta(lora_g["ka"], lora_g["kb"], None, Hkv)
+    attn_p["wv"] = params["attn"]["wv"] + delta(lora_g["va"], lora_g["vb"], None, Hkv)
+
+    attn_out, new_cache = L.attention_apply(
+        attn_p, cfg, hn, positions=positions, causal=True, cache=cache,
+        window=cfg.swa_window,
+    )
+    h = h + attn_out
+    hn2 = L.rmsnorm(h, params["norm2"])
+    h = h + L.mlp_apply(params["mlp"], cfg.scaled(sparse_mlp=False), hn2)
+    return h, new_cache
+
+
+def _mamba_slice(params_mamba, g: int, per: int):
+    return jax.tree_util.tree_map(
+        lambda a: a[g * per : (g + 1) * per], params_mamba
+    )
+
+
+def forward(params, cfg: ModelConfig, tokens, *, specs=None,
+            patch_embeds=None, last_only: bool = False):
+    from .transformer import LMOutputs
+
+    del patch_embeds
+    dt = cfg.activation_dtype
+    G = _num_groups(cfg)
+    per = cfg.attn_every
+    h = params["embed"].astype(dt)[tokens]
+    h = constrain(h, "batch", "seq", "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def mamba_body(h, layer_params):
+        hn = L.rmsnorm(h, layer_params["norm1"])
+        mix, _ = ssm_mod.ssm_apply(layer_params["mixer"], cfg, hn)
+        return h + mix, None
+
+    if cfg.remat != "none":
+        mamba_body = jax.checkpoint(mamba_body)
+
+    for g in range(G):
+        h, _ = jax.lax.scan(mamba_body, h, _mamba_slice(params["mamba"], g, per),
+                            unroll=not cfg.scan_layers)
+        lora_g = jax.tree_util.tree_map(lambda a: a[g], params["lora"])
+        blk = lambda hh: _shared_block(
+            params["shared"], lora_g, cfg, hh, positions
+        )[0]
+        h = jax.checkpoint(blk)(h) if cfg.remat != "none" else blk(h)
+
+    h = L.rmsnorm(h, params["final_norm"])
+    if last_only:
+        h = h[:, -1:, :]
+    logits = L.mask_pad_logits(h @ params["unembed"].astype(dt), cfg)
+    return LMOutputs(
+        logits=constrain(logits, "batch", "seq", "vocab"),
+        aux_loss=jnp.zeros((), jnp.float32),
+    )
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    G = _num_groups(cfg)
+    ssm_state = ssm_mod.ssm_state_init(cfg, batch, cfg.num_layers)
+    attn_cache = L.decode_cache_init(cfg, batch, max_len, G)
+    return {"ssm": ssm_state, "attn": attn_cache}
+
+
+def decode_state_axes(cfg: ModelConfig):
+    return {"ssm": ssm_mod.SSM_STATE_AXES, "attn": L.CACHE_AXES}
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, pos, *, specs=None):
+    dt = cfg.activation_dtype
+    G = _num_groups(cfg)
+    per = cfg.attn_every
+    h = params["embed"].astype(dt)[tokens]
+    positions = pos[:, None]
+
+    new_ssd, new_conv, new_k, new_v = [], [], [], []
+    for g in range(G):
+        def body(h, xs):
+            layer_params, ssd, conv = xs
+            hn = L.rmsnorm(h, layer_params["norm1"])
+            mix, ns = ssm_mod.ssm_decode_step(
+                layer_params["mixer"], cfg, hn, {"ssd": ssd, "conv": conv}
+            )
+            return h + mix, (ns["ssd"], ns["conv"])
+
+        sl = slice(g * per, (g + 1) * per)
+        h, (ssd_g, conv_g) = jax.lax.scan(
+            body, h,
+            (_mamba_slice(params["mamba"], g, per),
+             state["ssm"]["ssd"][sl], state["ssm"]["conv"][sl]),
+            unroll=not cfg.scan_layers,
+        )
+        new_ssd.append(ssd_g)
+        new_conv.append(conv_g)
+
+        lora_g = jax.tree_util.tree_map(lambda a: a[g], params["lora"])
+        cache = {
+            "k": state["attn"]["k"][g], "v": state["attn"]["v"][g],
+            "pos": state["attn"]["pos"],
+        }
+        h, nc = _shared_block(
+            params["shared"], lora_g, cfg, h, positions, cache=cache
+        )
+        new_k.append(nc["k"])
+        new_v.append(nc["v"])
+
+    new_state = {
+        "ssm": {"ssd": jnp.concatenate(new_ssd), "conv": jnp.concatenate(new_conv)},
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                 "pos": state["attn"]["pos"] + 1},
+    }
+    h = L.rmsnorm(h, params["final_norm"])
+    logits = L.mask_pad_logits((h @ params["unembed"].astype(dt))[:, 0, :], cfg)
+    return constrain(logits, "batch", "vocab"), new_state

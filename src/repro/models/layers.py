@@ -1,0 +1,368 @@
+"""Shared layer library: norms, embeddings, RoPE, attention cores, MLPs.
+
+Functional style: ``*_init(key, ...) -> (params, axes)`` where ``axes``
+is a parallel pytree of logical-axis tuples (see sharding.py), and
+``*_apply(params, x, ...)`` is pure. Everything composes under scan/remat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .sharding import constrain
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, axes: tuple, scale: float | None = None):
+    scale = d_in**-0.5 if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return w, axes
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), jnp.float32), ("embed",)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return w, ("vocab", "w_embed")
+
+
+def vocab_logit_mask(vocab_real: int, vocab_padded: int) -> jax.Array:
+    """(Vpad,) additive mask: 0 for real ids, -1e9 for padding ids."""
+    ids = jnp.arange(vocab_padded)
+    return jnp.where(ids < vocab_real, 0.0, -1e9).astype(jnp.float32)
+
+
+def mask_pad_logits(logits: jax.Array, cfg) -> jax.Array:
+    """Suppress padding-vocab logits (no-op when vocab needs no padding)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    mask = vocab_logit_mask(cfg.vocab_size, cfg.padded_vocab).astype(logits.dtype)
+    return logits + mask
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions (...,) -> cos/sin (..., head_dim/2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, dh); cos/sin broadcastable (..., S, 1, dh/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core (q-chunked, memory-efficient; GQA; optional SWA window)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """Additive bias (q, k) in f32: 0 allowed, -inf masked."""
+    if causal:
+        allowed = q_pos[..., :, None] >= k_pos[..., None, :]
+    else:
+        allowed = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if window is not None:
+        near = q_pos[..., :, None] - k_pos[..., None, :] < window
+        allowed = jnp.logical_and(allowed, near)
+    return jnp.where(allowed, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_core(
+    q: jax.Array,            # (B, Sq, H, dh)
+    k: jax.Array,            # (B, Sk, Hkv, dh)
+    v: jax.Array,            # (B, Sk, Hkv, dh)
+    *,
+    causal: bool,
+    window: int | None = None,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0]
+    chunk: int = 1024,
+    kv_valid_len: jax.Array | None = None,  # decode: #valid cache slots
+    unroll: bool = False,
+) -> jax.Array:
+    """Memory-efficient attention: scan over q chunks, full-K softmax rows.
+
+    Never materializes the (Sq, Sk) score tensor — per-step memory is
+    (chunk, Sk), which is what makes prefill_32k lowerable and keeps the
+    roofline memory term honest. GQA: q heads grouped onto kv heads.
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    groups = H // Hkv
+    scale = dh**-0.5
+    qf = (q * scale).astype(jnp.bfloat16) if q.dtype == jnp.bfloat16 else q * scale
+    k_pos = jnp.arange(Sk)
+
+    # GQA as repeat-kv (Megatron TP style): broadcasting K/V to H heads lets
+    # every attention tensor shard on the full `heads` axis — grouped-einsum
+    # formulations force uneven kv-head shardings (kv < TP width) and make
+    # GSPMD fall back to full rematerialization copies.
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    # keep the (possibly sharded) kv sequence dim pinned through the
+    # repeat/blend chain — losing it makes GSPMD gather the whole cache
+    k = constrain(k, "batch", "kv_seq", "heads", None)
+    v = constrain(v, "batch", "kv_seq", "heads", None)
+
+    def one_chunk(q_chunk: jax.Array, q_pos: jax.Array) -> jax.Array:
+        # q_chunk (B, C, H, dh). NOTE: bf16 operands with f32 accumulation
+        # via preferred_element_type — an explicit astype(f32) materializes
+        # a full-cache convert+copy every layer (measured 4.3 GB/op at
+        # decode_32k; §Perf cell C).
+        logits = jnp.einsum(
+            "bchd,bshd->bhcs", q_chunk, k,
+            preferred_element_type=jnp.float32,
+        )
+        bias = _mask_bias(q_pos, k_pos, causal, window)  # (C, Sk)
+        if kv_valid_len is not None:
+            valid = k_pos[None, :] < kv_valid_len[:, None]  # (B, Sk)
+            bias = bias[None, :, :] + jnp.where(valid, 0.0, -jnp.inf)[:, None, :]
+            logits = logits + bias[:, None, :, :]
+        else:
+            logits = logits + bias[None, None, :, :]
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhcs,bshd->bchd", probs.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return out.astype(q.dtype)
+
+    if Sq <= chunk:
+        q_pos = q_offset + jnp.arange(Sq)
+        return one_chunk(qf, q_pos)
+
+    Sq_pad = -(-Sq // chunk) * chunk
+    if Sq_pad != Sq:
+        qf = jnp.pad(qf, ((0, 0), (0, Sq_pad - Sq), (0, 0), (0, 0)))
+    n_chunks = Sq_pad // chunk
+    qs = qf.reshape(B, n_chunks, chunk, H, dh)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        return None, one_chunk(qc, q_pos)
+
+    _, outs = jax.lax.scan(
+        body, None, (jnp.moveaxis(qs, 1, 0), jnp.arange(n_chunks)),
+        unroll=unroll,
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_pad, H, dh)
+    return out[:, :Sq] if Sq_pad != Sq else out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attention_axes(cfg: ModelConfig) -> dict:
+    axes = {
+        "wq": ("w_embed", "heads", None),
+        "wk": ("w_embed", "kv", None),
+        "wv": ("w_embed", "kv", None),
+        "wo": ("heads", None, "w_embed"),
+    }
+    if cfg.qk_norm:
+        axes["q_norm"] = (None,)
+        axes["k_norm"] = (None,)
+    return axes
+
+
+def attention_init(key, cfg: ModelConfig):
+    d, H, Hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = _split(key, 4)
+    params = {
+        "wq": jax.random.normal(ks[0], (d, H, dh), jnp.float32) * d**-0.5,
+        "wk": jax.random.normal(ks[1], (d, Hkv, dh), jnp.float32) * d**-0.5,
+        "wv": jax.random.normal(ks[2], (d, Hkv, dh), jnp.float32) * d**-0.5,
+        "wo": jax.random.normal(ks[3], (H, dh, d), jnp.float32) * (H * dh) ** -0.5,
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((dh,), jnp.float32)
+        params["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return params, attention_axes(cfg)
+
+
+def attention_apply(
+    params,
+    cfg: ModelConfig,
+    x: jax.Array,                     # (B, S, d)
+    *,
+    positions: jax.Array,             # (S,) or (B, S)
+    causal: bool = True,
+    cache: dict | None = None,        # decode: {"k","v","pos"}
+    window: int | None = None,
+) -> tuple[jax.Array, dict | None]:
+    dt = x.dtype
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+    cos, sin = cos[..., None, :], sin[..., None, :]   # broadcast over heads
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv", None)
+
+    new_cache = None
+    if cache is None:
+        out = attention_core(
+            q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk,
+            unroll=cfg.attn_unroll,
+        )
+    else:
+        # decode: append this step's k/v into the (ring) cache
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]  # pos (B,)
+        S_max = ck.shape[1]
+        slot = (pos % S_max).astype(jnp.int32)
+        ck = _scatter_step(ck, k, slot)
+        cv = _scatter_step(cv, v, slot)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+        kv_len = jnp.minimum(pos + 1, S_max)
+        out = attention_core(
+            q, ck, cv, causal=False, window=None,
+            kv_valid_len=kv_len, chunk=cfg.attn_chunk,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return constrain(y, "batch", "seq", "embed"), new_cache
+
+
+def _scatter_step(cache: jax.Array, kv: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write kv (B, 1, Hkv, dh) at per-batch slot into cache (B, S, Hkv, dh).
+
+    Implemented as a one-hot BLEND, not a true scatter, deliberately: under
+    a sequence-sharded cache (flash-decoding layout) a dynamic scatter's
+    write crosses shard boundaries and GSPMD falls back to gathering the
+    whole cache; the blend distributes over shards trivially. Measured in
+    EXPERIMENTS.md §Perf cell C: scatter+seq-sharded = 5.3x worse memory
+    term than blend+seq-sharded. (On a single device a donated true
+    scatter IS cheaper — this is a sharding-driven choice.)
+    """
+    oh = jax.nn.one_hot(slot, cache.shape[1], dtype=cache.dtype)  # (B, S)
+    return cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * kv
+
+
+def decode_cache_init(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    """Ring-buffer KV cache; SWA archs only keep the window."""
+    window = cfg.swa_window
+    S = min(max_len, window) if window else max_len
+    dh = cfg.resolved_head_dim
+    shape = (n_layers, batch, S, cfg.num_kv_heads, dh)
+    return {
+        # distinct buffers — k/v must not alias (donation safety)
+        "k": jnp.zeros(shape, cfg.activation_dtype),
+        "v": jnp.zeros(shape, cfg.activation_dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+CACHE_AXES = {"k": (None, "batch", "kv_seq", "kv", None),
+              "v": (None, "batch", "kv_seq", "kv", None),
+              "pos": ("batch",)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs (SwiGLU; dense or CB-sparse)
+# ---------------------------------------------------------------------------
+
+def build_mlp_specs(cfg: ModelConfig, seed: int = 42):
+    """CB sparsity specs for the SwiGLU projections (numpy-only).
+
+    One pattern shared by every layer (pattern-shared block sparsity —
+    required for scanned/stacked layer params; DESIGN.md §8).
+    """
+    if not cfg.sparse_mlp:
+        return None
+    from repro.sparse.linear import cb_spec_random
+
+    d, ff = cfg.d_model, cfg.d_ff
+    mk = lambda i, o, s: cb_spec_random(
+        i, o, block_size=cfg.sparse_block, keep_fraction=cfg.sparse_keep, seed=s
+    )
+    return {"gate": mk(d, ff, seed), "up": mk(d, ff, seed + 1),
+            "down": mk(ff, d, seed + 2)}
+
+
+def mlp_axes(cfg: ModelConfig) -> dict:
+    if cfg.sparse_mlp:
+        # tiles are small and uniform; replicate (FSDP gains negligible)
+        return {
+            "gate": {"tiles": (None, None, None)},
+            "up": {"tiles": (None, None, None)},
+            "down": {"tiles": (None, None, None)},
+        }
+    return {
+        "w_gate": ("w_embed", "mlp"),
+        "w_up": ("w_embed", "mlp"),
+        "w_down": ("mlp", "w_embed"),
+    }
+
+
+def mlp_init(key, cfg: ModelConfig, specs=None):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = _split(key, 3)
+    if cfg.sparse_mlp:
+        from repro.sparse.linear import cb_tiles_init
+
+        assert specs is not None, "sparse_mlp requires precomputed specs"
+        params = {
+            "gate": cb_tiles_init(ks[0], specs["gate"]),
+            "up": cb_tiles_init(ks[1], specs["up"]),
+            "down": cb_tiles_init(ks[2], specs["down"]),
+        }
+        return params, mlp_axes(cfg), specs
+    params = {
+        "w_gate": jax.random.normal(ks[0], (d, ff), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(ks[1], (d, ff), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(ks[2], (ff, d), jnp.float32) * ff**-0.5,
+    }
+    return params, mlp_axes(cfg), None
+
+
+def mlp_apply(params, cfg: ModelConfig, x: jax.Array, specs=None) -> jax.Array:
+    dt = x.dtype
+    if cfg.sparse_mlp:
+        from repro.sparse.linear import cb_linear_apply
+
+        g = cb_linear_apply(params["gate"], specs["gate"], x)
+        u = cb_linear_apply(params["up"], specs["up"], x)
+        h = jax.nn.silu(g) * u
+        h = constrain(h, "batch", "seq", "mlp")
+        return cb_linear_apply(params["down"], specs["down"], h)
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "seq", "mlp")
+    return constrain(h @ params["w_down"].astype(dt), "batch", "seq", "embed")

@@ -1,0 +1,88 @@
+"""Unified model API: one entry point per family.
+
+    model = Model(cfg)
+    params, axes = model.init(key)          # concrete init
+    shapes, axes = model.abstract_init(key) # ShapeDtypeStructs (dry-run)
+    loss, metrics = model.loss(params, batch)
+    state = model.init_decode_state(batch, max_len)
+    logits, state = model.decode_step(params, state, tokens, pos)
+
+``axes`` is the logical-axis pytree consumed by sharding.logical_to_sharding.
+CB sparsity specs (cfg.sparse_mlp) are built eagerly at construction —
+they are structural (numpy-only), shared across layers, and never traced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, hybrid, transformer
+from .layers import build_mlp_specs
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs = build_mlp_specs(cfg) if cfg.sparse_mlp else None
+        if cfg.family in ("dense", "moe", "ssm", "vlm"):
+            self._mod = transformer
+        elif cfg.family == "hybrid":
+            self._mod = hybrid
+        elif cfg.family == "encdec":
+            self._mod = encdec
+        else:
+            raise ValueError(f"unknown family {cfg.family!r}")
+
+    # ------------------------------------------------------------------
+    def axes(self):
+        if self._mod is transformer:
+            return transformer.lm_axes(self.cfg)
+        if self._mod is hybrid:
+            return hybrid.hybrid_axes(self.cfg)
+        return encdec.encdec_axes(self.cfg)
+
+    def init(self, key: jax.Array):
+        if self._mod is transformer:
+            params, axes, _ = transformer.lm_init(key, self.cfg, specs=self.specs)
+        elif self._mod is hybrid:
+            params, axes, _ = hybrid.hybrid_init(key, self.cfg)
+        else:
+            params, axes, _ = encdec.encdec_init(key, self.cfg)
+        return params, axes
+
+    def abstract_init(self, key: jax.Array):
+        """Shape-only init (no allocation) — the dry-run entry point."""
+        shapes = jax.eval_shape(lambda k: self.init(k)[0], key)
+        return shapes, self.axes()
+
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, **kw):
+        return self._mod.forward(params, self.cfg, tokens, specs=self.specs, **kw)
+
+    def loss(self, params, batch, **kw):
+        if self._mod is transformer:
+            return transformer.lm_loss(params, self.cfg, batch,
+                                       specs=self.specs, **kw)
+        fwd_kw = {}
+        if self.cfg.family == "encdec":
+            fwd_kw["frames"] = batch["frames"]
+        out = self.forward(params, batch["tokens"], **fwd_kw)
+        logits = out.logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jax.nn.one_hot(batch["targets"], self.cfg.padded_vocab,
+                             dtype=jnp.float32)
+        xent = -jnp.mean(jnp.sum(logits * tgt, -1) - logz)
+        return xent, {"xent": xent}
+
+    # ------------------------------------------------------------------
+    def init_decode_state(self, batch: int, max_len: int):
+        return self._mod.init_decode_state(self.cfg, batch, max_len)
+
+    def decode_state_axes(self):
+        return self._mod.decode_state_axes(self.cfg)
+
+    def decode_step(self, params, state, tokens, pos):
+        return self._mod.decode_step(params, self.cfg, state, tokens, pos,
+                                     specs=self.specs)

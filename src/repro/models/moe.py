@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based ragged dispatch.
+
+Dispatch is the sort+gather scheme (no (tokens x experts x capacity)
+one-hot tensors — those are quadratic in memory at our token counts):
+token->expert assignments are sorted by expert id, each token's position
+within its expert is computed from run starts, tokens beyond capacity are
+dropped (standard GShard capacity discipline), and the (E, C, d) buffer is
+built with one gather. Experts shard over the ``model`` axis (EP == TP
+axis, DESIGN.md §5), so the scatter/gather lower to all-to-alls under
+GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .sharding import constrain
+
+
+def moe_axes(cfg: ModelConfig) -> dict:
+    # expert weights use the dedicated "expert_mlp" logical axis for their
+    # FFN dim: with EP (experts -> model) it maps to None; when the expert
+    # count doesn't divide the TP width (mixtral: 8 < 16) the rule table
+    # flips to experts -> None, expert_mlp -> model (plain TP inside every
+    # expert). Both mappings are chosen in launch/mesh.rules_for.
+    axes = {
+        "router": ("w_embed", None),
+        "w_gate": ("experts", "w_embed", "expert_mlp"),
+        "w_up": ("experts", "w_embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "w_embed"),
+    }
+    if cfg.moe_shared_expert:
+        axes["shared"] = {
+            "w_gate": ("w_embed", "mlp"),
+            "w_up": ("w_embed", "mlp"),
+            "w_down": ("mlp", "w_embed"),
+        }
+    return axes
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * d**-0.5,
+        "w_gate": jax.random.normal(ks[1], (E, d, ff), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(ks[2], (E, d, ff), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(ks[3], (E, ff, d), jnp.float32) * ff**-0.5,
+    }
+    if cfg.moe_shared_expert:
+        params["shared"] = {
+            "w_gate": jax.random.normal(ks[4], (d, ff), jnp.float32) * d**-0.5,
+            "w_up": jax.random.normal(jax.random.fold_in(ks[4], 1), (d, ff), jnp.float32) * d**-0.5,
+            "w_down": jax.random.normal(jax.random.fold_in(ks[4], 2), (ff, d), jnp.float32) * ff**-0.5,
+        }
+    return params, moe_axes(cfg)
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)
+
+
+def _dispatch_one_group(params, cfg: ModelConfig, xt: jax.Array,
+                        C: int) -> tuple[jax.Array, jax.Array]:
+    """Sort-based top-k dispatch for ONE token group. xt (T, d)."""
+    T, d = xt.shape
+    E, K = cfg.num_experts, cfg.top_k
+    dt = xt.dtype
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                 # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Switch-style load-balancing auxiliary loss.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based ragged dispatch ------------------------------------
+    flat_expert = expert_ids.reshape(-1)                 # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    s_expert = flat_expert[order]
+    s_token = flat_token[order]
+    s_gate = flat_gate[order]
+    # position within expert = rank - start-of-run(expert)
+    starts = jnp.searchsorted(s_expert, jnp.arange(E))   # (E,)
+    pos = jnp.arange(T * K) - starts[s_expert]
+    keep = pos < C
+
+    buf_idx = jnp.where(keep, s_expert * C + pos, E * C)  # overflow slot
+    buf = jnp.zeros((E * C + 1, d), dt).at[buf_idx].set(xt[s_token])
+    buf = buf[:-1].reshape(E, C, d)
+    return (buf, (buf_idx, s_token, s_gate, keep, aux))
+
+
+def _combine_one_group(out_buf, meta, T: int, dt):
+    buf_idx, s_token, s_gate, keep, _ = meta
+    E_C = out_buf.shape[0] * out_buf.shape[1]
+    flat_out = out_buf.reshape(E_C, -1)
+    gathered = jnp.where(
+        keep[:, None], flat_out[jnp.minimum(buf_idx, E_C - 1)], 0.0
+    )
+    return jnp.zeros((T, flat_out.shape[1]), dt).at[s_token].add(
+        gathered * s_gate[:, None].astype(dt)
+    )
+
+
+def moe_apply(params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (out, aux_loss).
+
+    Dispatch runs per token GROUP (cfg.moe_groups, GShard-style): capacity
+    is per-group, so with groups == the batch-shard width every
+    sort/scatter/combine is shard-LOCAL and the only cross-device traffic
+    left is the canonical expert einsum collective (TP partial-sum
+    all-reduce or EP all-to-all). groups=1 reproduces global dispatch.
+    """
+    B, S, d = x.shape
+    T = B * S
+    G = max(1, min(cfg.moe_groups, T))   # batch-1 decode: fall back to G=1
+    while T % G:
+        G -= 1
+    dt = x.dtype
+    xg = x.reshape(G, T // G, d)
+    xg = constrain(xg, "batch", None, "embed")
+    C = _capacity(T // G, cfg)
+
+    buf, meta = jax.vmap(
+        lambda xt: _dispatch_one_group(params, cfg, xt, C)
+    )(xg)
+    # buf (G, E, C, d)
+    buf = constrain(buf, "batch", "experts", "expert_cap", "embed")
+
+    # ---- expert FFN (batched over group + expert axes) -------------------
+    g = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "batch", "experts", "expert_cap", "expert_mlp")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(dt))
+    out_buf = constrain(out_buf, "batch", "experts", "expert_cap", "embed")
+
+    y = jax.vmap(
+        lambda ob, m: _combine_one_group(ob, m, T // G, dt)
+    )(out_buf, meta)
+    aux = jnp.mean(meta[4])
+
+    y = y.reshape(T, d)
+    if cfg.moe_shared_expert:
+        sh = params["shared"]
+        xt = x.reshape(T, d)
+        gs = xt @ sh["w_gate"].astype(dt)
+        us = xt @ sh["w_up"].astype(dt)
+        y = y + (jax.nn.silu(gs) * us) @ sh["w_down"].astype(dt)
+
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (MaxText-style) for the model stack.
+
+Model code names tensor dimensions with *logical* axes ("batch", "embed",
+"heads", ...); a rule table maps them to physical mesh axes at launch.
+Parameters carry a parallel pytree of logical-axis tuples produced by the
+init functions; ``logical_to_sharding`` turns those into NamedShardings
+for jit's in_shardings, and ``constrain`` applies activation constraints
+inside the traced function.
+
+Default rules implement Megatron-TP x FSDP x DP:
+  * activations: batch -> (pod, data); model-parallel dims -> model
+  * weights: the "embed" dim shards over data (ZeRO/FSDP — keeps per-chip
+    parameter+optimizer bytes flat as the pod grows), TP dims over model,
+    and nothing over pod (pod is pure DP: weights replicated per pod,
+    gradients psum across pods).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicated)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,        # activations' model dim stays replicated
+    "heads": "model",
+    "kv": "model",
+    "kv_seq": None,       # decode cache seq; long-context overrides to model
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,   # EP default; flipped to "model" for TP-MoE
+    "expert_cap": None,
+    "layers": None,
+    "conv": None,
+    "ssm_state": None,
+    "frames": None,
+    "patches": None,
+    # weight-only axes
+    "w_embed": "data",    # FSDP shard of the embed dim of weight matrices
+    "w_layers": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict = dict(DEFAULT_RULES)
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict | None = None):
+    """Activate a mesh + rule table for model tracing."""
+    old = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _ctx.rules = merged
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = old
+
+
+def _resolve(axis: str | None):
+    if axis is None:
+        return None
+    mapped = _ctx.rules.get(axis, None)
+    if mapped is None:
+        return None
+    mesh_axes = _ctx.mesh.axis_names if _ctx.mesh is not None else ()
+    if isinstance(mapped, tuple):
+        present = tuple(a for a in mapped if a in mesh_axes)
+        return present if present else None
+    return mapped if mapped in mesh_axes else None
+
+
+def spec_for(axes: tuple) -> P:
+    """Logical axis tuple -> PartitionSpec under the active rules."""
+    return P(*[_resolve(a) for a in axes])
+
+
+def logical_to_sharding(axes_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    with axis_rules(mesh, rules):
+        return jax.tree_util.tree_map(
+            lambda axes: NamedSharding(mesh, spec_for(axes)),
+            axes_tree,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+
+def sanitize_shardings(shapes_tree, shardings_tree, mesh: Mesh):
+    """Drop sharding on any dim the mesh axes don't divide (jit inputs
+    require exact divisibility). The production rule tables avoid this by
+    construction (vocab padding, split projections); this is the safety
+    net for residual odd dims (e.g. a 12-head model on a 16-wide axis)."""
+
+    def fix(shape_leaf, sh: NamedSharding):
+        spec = list(sh.spec) + [None] * (len(shape_leaf.shape) - len(sh.spec))
+        out = []
+        for dim, ax in zip(shape_leaf.shape, spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            width = 1
+            for a in axes:
+                width *= mesh.shape[a]
+            out.append(ax if dim % width == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map(fix, shapes_tree, shardings_tree)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Apply a logical-axis sharding constraint (no-op without a mesh)."""
+    if _ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ctx.mesh, spec_for(axes))
+    )

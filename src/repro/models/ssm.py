@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel in JAX.
+
+Implements the SSD algorithm of Mamba2 (arXiv:2405.21060): within-chunk
+interactions as dense (Q x Q) matmuls (MXU-friendly — the whole point of
+SSD) and across-chunk state carried by a lax.scan recurrence. Recurrences
+run in f32; inputs/outputs follow the model activation dtype.
+
+Decode is a single-step state update: S <- exp(dt*A) S + dt * x B^T,
+y = C.S — O(1) per token, which is why the ssm/hybrid archs run the
+long_500k shape (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import rmsnorm
+from .sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_model * cfg.ssm_expand
+    nh = d_in // cfg.ssm_headdim
+    return d_in, nh, cfg.ssm_headdim, cfg.ssm_state
+
+
+def ssm_axes(cfg: ModelConfig) -> dict:
+    # in_proj is SPLIT into z / xBC / dt projections so each output dim
+    # shards cleanly over the model axis (the fused layout's width is not
+    # divisible by TP width in general — DESIGN.md hardware adaptation).
+    return {
+        "in_z": ("w_embed", "mlp"),
+        "in_xbc": ("w_embed", "mlp"),
+        "in_dt": ("w_embed", None),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_w": ("mlp",),
+        "out_proj": ("mlp", "w_embed"),
+    }
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, nh, hd, ds = _dims(cfg)
+    conv_ch = d_in + 2 * ds
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_z": jax.random.normal(ks[0], (d, d_in), jnp.float32) * d**-0.5,
+        "in_xbc": jax.random.normal(ks[4], (d, d_in + 2 * ds), jnp.float32) * d**-0.5,
+        "in_dt": jax.random.normal(ks[5], (d, nh), jnp.float32) * d**-0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), jnp.float32) * d_in**-0.5,
+    }
+    return params, ssm_axes(cfg)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d: x (B, L, C), w (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b[None, None, :]
+
+
+def _in_proj(params, x, dt_):
+    """Split z / xBC / dt projections (each TP-shardable on its own)."""
+    z = x @ params["in_z"].astype(dt_)
+    xBC = x @ params["in_xbc"].astype(dt_)
+    dt = x @ params["in_dt"].astype(dt_)
+    return z, xBC, dt
+
+
+def ssd_chunked(
+    xh: jax.Array,    # (B, L, nh, hd)
+    dt: jax.Array,    # (B, L, nh) — post-softplus
+    A: jax.Array,     # (nh,) negative
+    Bm: jax.Array,    # (B, L, ds)
+    Cm: jax.Array,    # (B, L, ds)
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, nh, hd, ds)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,nh,hd) f32, final_state f32)."""
+    B_, L, nh, hd = xh.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xf = xh.astype(jnp.float32).reshape(B_, nc, Q, nh, hd)
+    dtf = dt.astype(jnp.float32).reshape(B_, nc, Q, nh)
+    Bf = Bm.astype(jnp.float32).reshape(B_, nc, Q, ds)
+    Cf = Cm.astype(jnp.float32).reshape(B_, nc, Q, ds)
+
+    da = dtf * A[None, None, None, :]               # (B, nc, Q, nh), <= 0
+    cum = jnp.cumsum(da, axis=2)                     # inclusive
+    total = cum[:, :, -1, :]                         # (B, nc, nh)
+
+    # ---- intra-chunk (dense QxQ attention-like matmul) -------------------
+    G = jnp.einsum("bcqs,bcks->bcqk", Cf, Bf)        # (B, nc, Q, Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B, nc, Q, K, nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    M = G[..., None] * decay * dtf[:, :, None, :, :]      # weight at key pos
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xf)
+
+    # ---- chunk boundary states ------------------------------------------
+    # contribution of chunk c to its outgoing state
+    w_in = jnp.exp(total[:, :, None, :] - cum) * dtf      # (B, nc, Q, nh)
+    S_in = jnp.einsum("bcks,bckhp,bckh->bchps", Bf, xf, w_in)  # (B,nc,nh,hd,ds)
+
+    S0 = (
+        jnp.zeros((B_, nh, hd, ds), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def scan_fn(S_prev, inp):
+        S_c, tot_c = inp                       # (B, nh, hd, ds), (B, nh)
+        S_next = jnp.exp(tot_c)[:, :, None, None] * S_prev + S_c
+        return S_next, S_prev                  # emit the *incoming* state
+
+    S_last, S_prevs = jax.lax.scan(
+        scan_fn, S0,
+        (jnp.moveaxis(S_in, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)      # (B, nc, nh, hd, ds)
+
+    # ---- inter-chunk output ----------------------------------------------
+    y_inter = jnp.einsum(
+        "bcqs,bchps,bcqh->bcqhp", Cf, S_prevs, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(B_, L, nh, hd)
+    return y, S_last
+
+
+def ssm_apply(
+    params, cfg: ModelConfig, x: jax.Array,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Full-sequence forward (training/prefill). x (B, L, d)."""
+    dt_ = x.dtype
+    d_in, nh, hd, ds = _dims(cfg)
+    z, xBC, dt_raw = _in_proj(params, x, dt_)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(dt_),
+                                   params["conv_b"].astype(dt_)))
+    xs = xBC[..., :d_in]
+    Bm = xBC[..., d_in : d_in + ds]
+    Cm = xBC[..., d_in + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(*xs.shape[:-1], nh, hd)
+    xh = constrain(xh, "batch", "seq", "heads", None)
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], d_in).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["out_proj"].astype(dt_)
+    return constrain(out, "batch", "seq", "embed"), None
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int, n_layers: int):
+    d_in, nh, hd, ds = _dims(cfg)
+    conv_ch = d_in + 2 * ds
+    return {
+        "ssd": jnp.zeros((n_layers, batch, nh, hd, ds), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          jnp.float32),
+    }
+
+
+SSM_STATE_AXES = {"ssd": (None, "batch", "heads", None, None),
+                  "conv": (None, "batch", None, "mlp")}
+
+
+def ssm_decode_step(
+    params, cfg: ModelConfig, x: jax.Array, state: dict
+) -> tuple[jax.Array, dict]:
+    """Single-token step. x (B, 1, d); state {"ssd", "conv"} per layer slice."""
+    dt_ = x.dtype
+    d_in, nh, hd, ds = _dims(cfg)
+    z, xBC, dt_raw = _in_proj(params, x[:, 0, :], dt_)
+    # conv ring: state["conv"] (B, W-1, C) holds previous inputs
+    W = cfg.ssm_conv_width
+    hist = jnp.concatenate([state["conv"].astype(dt_), xBC[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, params["conv_w"].astype(dt_))
+    xBC_t = jax.nn.silu(conv_out + params["conv_b"].astype(dt_))
+    new_conv = hist[:, 1:, :].astype(jnp.float32)
+
+    xs = xBC_t[..., :d_in]
+    Bm = xBC_t[..., d_in : d_in + ds].astype(jnp.float32)
+    Cm = xBC_t[..., d_in + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+
+    S = state["ssd"]                                       # (B, nh, hd, ds)
+    decay = jnp.exp(dt * A[None, :])                       # (B, nh)
+    S_new = decay[:, :, None, None] * S + jnp.einsum(
+        "bh,bhp,bs->bhps", dt, xh, Bm
+    )
+    y = jnp.einsum("bs,bhps->bhp", Cm, S_new)              # (B, nh, hd)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return out, {"ssd": S_new, "conv": new_conv}

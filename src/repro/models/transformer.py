@@ -1,0 +1,360 @@
+"""Decoder-only LM: the unified backbone for dense / moe / ssm / vlm archs.
+
+Layer parameters are stacked on a leading (L,) axis and driven by
+``lax.scan`` (compile-time O(1) in depth — at 64 layers x 512 devices this
+is what keeps the dry-run tractable); per-layer remat policy comes from
+``cfg.remat``. Hybrid (zamba2) and enc-dec (whisper) wrap this module —
+see hybrid.py / encdec.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .sharding import constrain
+
+
+class LMOutputs(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array
+
+
+def _prepend_layers_axis(axes):
+    return jax.tree_util.tree_map(
+        lambda a: ("w_layers",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def _moe_group_size(cfg: ModelConfig) -> int | None:
+    """k when MoE layers are interleaved every k layers (llama4), else None."""
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        assert cfg.num_layers % cfg.moe_every == 0
+        return cfg.moe_every
+    return None
+
+
+def _layer_axes(cfg: ModelConfig) -> dict:
+    if cfg.family == "ssm":
+        return {"mixer": ssm_mod.ssm_axes(cfg), "norm1": ("embed",)}
+    k = _moe_group_size(cfg)
+    if k is not None:
+        dense_cfg = cfg.scaled(family="dense")
+        return {
+            "dense": _prepend_layers_axis(_layer_axes(dense_cfg)),
+            "moe": _layer_axes(cfg.scaled(moe_every=1)),
+        }
+    ffn_axes = (
+        moe_mod.moe_axes(cfg) if cfg.family == "moe" else L.mlp_axes(cfg)
+    )
+    return {
+        "attn": L.attention_axes(cfg),
+        "ffn": ffn_axes,
+        "norm1": ("embed",),
+        "norm2": ("embed",),
+    }
+
+
+def _layer_init(key, cfg: ModelConfig, specs=None):
+    """One decoder layer's (or MoE layer-group's) params."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        p_mix, _ = ssm_mod.ssm_init(ks[0], cfg)
+        return {"mixer": p_mix, "norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    k = _moe_group_size(cfg)
+    if k is not None:
+        dense_cfg = cfg.scaled(family="dense")
+        dense = jax.vmap(lambda kk: _layer_init(kk, dense_cfg, specs=specs))(
+            jax.random.split(ks[2], k - 1)
+        )
+        moe = _layer_init(ks[3], cfg.scaled(moe_every=1), specs=specs)
+        return {"dense": dense, "moe": moe}
+    p_attn, _ = L.attention_init(ks[0], cfg)
+    if cfg.family == "moe":
+        p_ffn, _ = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p_ffn, _, _ = L.mlp_init(ks[1], cfg, specs=specs)
+    return {
+        "attn": p_attn,
+        "ffn": p_ffn,
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def lm_axes(cfg: ModelConfig) -> dict:
+    axes = {
+        "embed": ("vocab", "w_embed"),
+        "layers": _prepend_layers_axis(_layer_axes(cfg)),
+        "final_norm": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("w_embed", "vocab")
+    return axes
+
+
+def _num_scan_steps(cfg: ModelConfig) -> int:
+    k = _moe_group_size(cfg)
+    return cfg.num_layers // k if k is not None else cfg.num_layers
+
+
+def lm_init(key, cfg: ModelConfig, specs=None):
+    ks = jax.random.split(key, 4)
+    embed, _ = L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model)
+    keys = jax.random.split(ks[1], _num_scan_steps(cfg))
+    lyr = jax.vmap(lambda k: _layer_init(k, cfg, specs=specs))(keys)
+    params = {
+        "embed": embed,
+        "layers": lyr,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(ks[2], (cfg.d_model, cfg.padded_vocab), jnp.float32)
+            * cfg.d_model**-0.5
+        )
+    return params, lm_axes(cfg), specs
+
+
+def _group_body(
+    params: dict, cfg: ModelConfig, h: jax.Array, positions: jax.Array,
+    specs=None, caches: tuple | None = None,
+):
+    """One MoE layer-group: (k-1) dense layers then 1 MoE layer.
+
+    caches: optional (k_cache, v_cache) stacked (k, ...) for decode.
+    Returns (h, aux, new_caches or None).
+    """
+    k = _moe_group_size(cfg)
+    dense_cfg = cfg.scaled(family="dense")
+    new_k, new_v = [], []
+    aux = jnp.zeros((), jnp.float32)
+    for j in range(k - 1):
+        lp = jax.tree_util.tree_map(lambda a: a[j], params["dense"])
+        cache = None
+        if caches is not None:
+            cache = {"k": caches[0][j], "v": caches[1][j], "pos": caches[2]}
+        h, _, nc = _layer_body(lp, dense_cfg, h, positions, specs=specs,
+                               cache=cache)
+        if nc is not None:
+            new_k.append(nc["k"])
+            new_v.append(nc["v"])
+    cache = None
+    if caches is not None:
+        cache = {"k": caches[0][k - 1], "v": caches[1][k - 1], "pos": caches[2]}
+    h, aux_i, nc = _layer_body(params["moe"], cfg.scaled(moe_every=1), h,
+                               positions, specs=specs, cache=cache)
+    aux = aux + aux_i
+    if nc is not None:
+        new_k.append(nc["k"])
+        new_v.append(nc["v"])
+    new_caches = (
+        (jnp.stack(new_k), jnp.stack(new_v)) if caches is not None else None
+    )
+    return h, aux, new_caches
+
+
+def _layer_body(
+    params: dict, cfg: ModelConfig, h: jax.Array, positions: jax.Array,
+    specs=None, cache: dict | None = None,
+):
+    """Pre-norm residual layer. Returns (h, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        mix, _ = ssm_mod.ssm_apply(params["mixer"], cfg,
+                                   L.rmsnorm(h, params["norm1"]))
+        return h + mix, aux, None
+    attn_out, new_cache = L.attention_apply(
+        params["attn"], cfg, L.rmsnorm(h, params["norm1"]),
+        positions=positions, causal=True, cache=cache,
+        window=cfg.swa_window,
+    )
+    h = h + attn_out
+    hn = L.rmsnorm(h, params["norm2"])
+    if cfg.family == "moe":
+        ffn_out, aux = moe_mod.moe_apply(params["ffn"], cfg, hn)
+    else:
+        ffn_out = L.mlp_apply(params["ffn"], cfg, hn, specs=specs)
+    return h + ffn_out, aux, new_cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # (B, S)
+    *,
+    specs=None,
+    patch_embeds: jax.Array | None = None,
+    last_only: bool = False,            # prefill: only final-position logits
+) -> LMOutputs:
+    """Full-sequence forward -> logits (B, S_text, V) (or (B, 1, V))."""
+    dt = cfg.activation_dtype
+    h = params["embed"].astype(dt)[tokens]
+    n_prefix = 0
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(dt), h], axis=1)
+        n_prefix = patch_embeds.shape[1]
+    h = constrain(h, "batch", "seq", "embed")
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    grouped = _moe_group_size(cfg) is not None
+
+    def body(carry, layer_params):
+        h, aux = carry
+        if grouped:
+            h, aux_i, _ = _group_body(layer_params, cfg, h, positions,
+                                      specs=specs)
+        else:
+            h, aux_i, _ = _layer_body(layer_params, cfg, h, positions,
+                                      specs=specs)
+        return (h, aux + aux_i), None
+
+    body = _remat(body, cfg)
+    (h, aux), _ = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["layers"],
+        unroll=not cfg.scan_layers,
+    )
+
+    h = L.rmsnorm(h, params["final_norm"])
+    if n_prefix:
+        h = h[:, n_prefix:, :]
+    if last_only:
+        h = h[:, -1:, :]
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(dt)
+    logits = L.mask_pad_logits(h @ unembed, cfg)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return LMOutputs(logits=logits, aux_loss=aux / cfg.num_layers)
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    specs=None,
+    aux_weight: float = 0.01,
+    z_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    out = forward(
+        params, cfg, batch["tokens"], specs=specs,
+        patch_embeds=batch.get("patch_embeds"),
+    )
+    logits = out.logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jax.nn.one_hot(batch["targets"], cfg.padded_vocab, dtype=jnp.float32)
+    ll = jnp.sum(logits * tgt, axis=-1) - logz
+    xent = -jnp.mean(ll)
+    zloss = jnp.mean(jnp.square(logz))
+    loss = xent + aux_weight * out.aux_loss + z_weight * zloss
+    return loss, {"xent": xent, "aux": out.aux_loss, "zloss": zloss}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "ssm":
+        return ssm_mod.ssm_state_init(cfg, batch, cfg.num_layers)
+    return L.decode_cache_init(cfg, batch, max_len, cfg.num_layers)
+
+
+def decode_state_axes(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return ssm_mod.SSM_STATE_AXES
+    return L.CACHE_AXES
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    state: Any,
+    tokens: jax.Array,     # (B, 1)
+    pos: jax.Array,        # (B,)
+    *,
+    specs=None,
+) -> tuple[jax.Array, Any]:
+    """One token for every sequence in the batch. Returns (logits, state)."""
+    dt = cfg.activation_dtype
+    h = params["embed"].astype(dt)[tokens]      # (B, 1, d)
+    h = constrain(h, "batch", None, "embed")
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            layer_params, ssd, conv = xs
+            hn = L.rmsnorm(h, layer_params["norm1"])
+            mix, new_state = ssm_mod.ssm_decode_step(
+                layer_params["mixer"], cfg, hn, {"ssd": ssd, "conv": conv}
+            )
+            return h + mix, (new_state["ssd"], new_state["conv"])
+
+        h, (ssd, conv) = jax.lax.scan(
+            body, h, (params["layers"], state["ssd"], state["conv"]),
+            unroll=not cfg.scan_layers,
+        )
+        new_state = {"ssd": ssd, "conv": conv}
+    else:
+        positions = pos[:, None]                 # (B, 1) absolute
+        k_grp = _moe_group_size(cfg)
+
+        if k_grp is not None:
+            # caches are stacked (L, ...); regroup as (G, k, ...)
+            G = cfg.num_layers // k_grp
+            ck_all = state["k"].reshape((G, k_grp) + state["k"].shape[1:])
+            cv_all = state["v"].reshape((G, k_grp) + state["v"].shape[1:])
+
+            def body(h, xs):
+                group_params, ck, cv = xs
+                h, _, ncs = _group_body(group_params, cfg, h, positions,
+                                        specs=specs, caches=(ck, cv, pos))
+                return h, ncs
+
+            h, (ck, cv) = jax.lax.scan(
+                body, h, (params["layers"], ck_all, cv_all),
+                unroll=not cfg.scan_layers,
+            )
+            ck = ck.reshape(state["k"].shape)
+            cv = cv.reshape(state["v"].shape)
+        else:
+            def body(h, xs):
+                layer_params, ck, cv = xs
+                cache = {"k": ck, "v": cv, "pos": pos}
+                h, _, new_cache = _layer_body(
+                    layer_params, cfg, h, positions, specs=specs, cache=cache
+                )
+                return h, (new_cache["k"], new_cache["v"])
+
+            h, (ck, cv) = jax.lax.scan(
+                body, h, (params["layers"], state["k"], state["v"]),
+                unroll=not cfg.scan_layers,
+            )
+        new_state = {"k": ck, "v": cv, "pos": state["pos"] + 1}
+
+    h = L.rmsnorm(h, params["final_norm"])
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(dt)
+    logits = L.mask_pad_logits((h @ unembed)[:, 0, :], cfg)
+    return constrain(logits, "batch", "vocab"), new_state

@@ -1,0 +1,3 @@
+from .elastic import MeshPlan, plan_mesh, reshard_instructions  # noqa: F401
+from .fault_tolerance import HeartbeatMonitor, RestartPolicy  # noqa: F401
+from .pipeline import bubble_fraction, pipeline_forward  # noqa: F401

@@ -1,0 +1,66 @@
+"""Batched autoregressive decoding on top of the models' decode_step.
+
+Greedy + temperature sampling drivers. Prefill is performed by stepping
+the prompt through decode_step (cache-filling teacher forcing) — one code
+path for both phases keeps the serving state machine trivial; the
+prefill-optimized path (full-sequence forward) is exercised separately by
+the prefill_32k dry-run cells.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def build_decode_fn(model: Model) -> Callable:
+    """jitted (params, state, tokens, pos) -> (logits, state)."""
+
+    def step(params, state, tokens, pos):
+        return model.decode_step(params, state, tokens, pos)
+
+    return jax.jit(step, donate_argnums=1)
+
+
+def greedy_decode(
+    model: Model,
+    params,
+    prompts: jax.Array,        # (B, P) int32
+    max_new_tokens: int,
+    *,
+    max_len: int | None = None,
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+):
+    """Returns generated tokens (B, max_new_tokens)."""
+    B, P = prompts.shape
+    max_len = max_len or (P + max_new_tokens)
+    state = model.init_decode_state(B, max_len)
+    step_fn = build_decode_fn(model)
+
+    logits = None
+    for t in range(P):                       # prefill (cache-filling)
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, state = step_fn(params, state, prompts[:, t : t + 1], pos)
+
+    outs = []
+    tok = _select(logits, temperature, key, 0)
+    for t in range(max_new_tokens):
+        outs.append(tok)
+        pos = jnp.full((B,), P + t, jnp.int32)
+        logits, state = step_fn(params, state, tok[:, None], pos)
+        if key is not None:
+            key = jax.random.fold_in(key, t)
+        tok = _select(logits, temperature, key, t + 1)
+    return jnp.stack(outs, axis=1)
+
+
+def _select(logits, temperature, key, t):
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        jax.random.fold_in(key, t), logits / temperature
+    ).astype(jnp.int32)

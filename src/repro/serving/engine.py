@@ -1,0 +1,117 @@
+"""Continuous-batching serving engine (slot-based, vLLM-style scheduling
+at toy scale).
+
+A fixed number of batch slots share one decode cache. Each engine tick
+runs ONE decode_step for the whole batch; finished/empty slots are
+refilled from the request queue by resetting that slot's cache position
+(per-slot ``pos`` makes mixed-depth batches correct — attention masks by
+``kv_valid_len``). This is the serving shape the paper's SpMV targets:
+weight-bound batched matvec at small per-step batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+from .decode import build_decode_fn
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, slots: int = 8,
+                 max_len: int = 512, eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * slots
+        self._remaining_prompt: list[np.ndarray] = [np.zeros(0, np.int32)] * slots
+        self.state = model.init_decode_state(slots, max_len)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.next_token = np.zeros((slots,), np.int32)
+        self.step_fn = build_decode_fn(model)
+        self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                self._remaining_prompt[s] = np.asarray(req.prompt, np.int32)
+                self.pos = self.pos.at[s].set(0)
+                self._reset_slot_cache(s)
+
+    def _reset_slot_cache(self, s: int) -> None:
+        def zero_slot(leaf):
+            # state leaves are (L, B, ...) or (B, ...); zero batch index s
+            if leaf.ndim >= 2 and leaf.shape[1] == self.slots:
+                return leaf.at[:, s].set(0)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.slots:
+                return leaf.at[s].set(jnp.zeros_like(leaf[s]))
+            return leaf
+        self.state = jax.tree_util.tree_map(zero_slot, self.state)
+
+    # ------------------------------------------------------------------
+    def tick(self) -> list[Request]:
+        """One decode step for the whole batch. Returns finished requests."""
+        self._admit()
+        tokens = np.zeros((self.slots,), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if len(self._remaining_prompt[s]):
+                tokens[s] = self._remaining_prompt[s][0]
+            else:
+                tokens[s] = self.next_token[s]
+
+        logits, self.state = self.step_fn(
+            self.params, self.state, jnp.asarray(tokens)[:, None], self.pos
+        )
+        self.pos = self.pos + 1
+        picked = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        finished = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if len(self._remaining_prompt[s]):
+                self._remaining_prompt[s] = self._remaining_prompt[s][1:]
+                if len(self._remaining_prompt[s]) == 0:
+                    self.next_token[s] = picked[s]   # first generated token
+                continue
+            req.generated.append(int(self.next_token[s]))
+            self.next_token[s] = picked[s]
+            hit_eos = self.eos_id is not None and req.generated[-1] == self.eos_id
+            if len(req.generated) >= req.max_new_tokens or hit_eos:
+                req.done = True
+                finished.append(req)
+                self.active[s] = None
+        self.ticks += 1
+        return finished
+
+    def run_until_done(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        while (self.queue or any(self.active)) and self.ticks < max_ticks:
+            done.extend(self.tick())
+        return done

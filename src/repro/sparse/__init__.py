@@ -1,0 +1,3 @@
+"""CB block-sparse weight integration for the model stack."""
+from .linear import CBLinearSpec, cb_linear_apply, cb_linear_init  # noqa: F401
+from .prune import block_magnitude_prune, block_sparsity_pattern  # noqa: F401

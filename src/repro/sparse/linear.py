@@ -1,0 +1,287 @@
+"""CBSparseLinear — block-sparse linear layers backed by the CB kernels.
+
+The paper's technique as a first-class model feature: a linear layer whose
+weight is magnitude-pruned to B x B blocks and stored as a CB tile stream.
+Forward is CB-SpMM (prefill/training) or CB-SpMV (single-token decode);
+backward is a custom VJP whose dX pass runs the *transposed* tile stream
+(precomputed statically — sparsity patterns are trace-time constants) and
+whose dW pass is a gathered per-tile outer product.
+
+Sparsity metadata (brow/bcol and the transpose permutation) is static
+numpy closed over by the apply function, so jit embeds it as constants —
+the structure never rides the data path, exactly like the paper's
+preprocessed metadata arrays.
+
+Weight convention: the layer computes ``y = x @ W + b`` with
+``W: (in, out)``; internally the tile stream stores ``A = W^T`` (out, in)
+so that ``y^T = A @ x^T`` matches the kernels' row-major SpMM contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streams import TileStream, build_tile_stream
+
+from .prune import block_sparsity_pattern
+
+
+@dataclasses.dataclass(frozen=True)
+class CBLinearSpec:
+    """Static sparsity structure of one CB linear layer."""
+
+    in_features: int
+    out_features: int
+    block_size: int
+    keep_fraction: float
+    # A = W^T stream metadata (block-row-major, full row coverage)
+    brow: Any          # (nt,) numpy int32 — static
+    bcol: Any          # (nt,) numpy int32 — static
+    mb: int            # ceil(out / B)
+    nb: int            # ceil(in / B)
+    # transposed stream: tiles_T[i] = tiles[t_perm[i]]^T at (browT, bcolT)
+    t_perm: Any        # (ntT,) numpy int64 into the forward stream; -1 = zero pad
+    browT: Any
+    bcolT: Any
+
+    @property
+    def num_tiles(self) -> int:
+        return len(self.brow)
+
+    @property
+    def density(self) -> float:
+        return self.num_tiles / float(self.mb * self.nb)
+
+    def flops_per_token(self) -> int:
+        """Useful MACs per input row (2*nt*B^2) — roofline accounting."""
+        return 2 * self.num_tiles * self.block_size * self.block_size
+
+
+def _transpose_stream(brow: np.ndarray, bcol: np.ndarray, nb: int):
+    """Static metadata for A^T's stream, with full row coverage over nb."""
+    order = np.lexsort((brow, bcol))  # sort by (bcol, then brow)
+    browT = bcol[order].astype(np.int32)
+    bcolT = brow[order].astype(np.int32)
+    perm = order.astype(np.int64)
+    present = set(browT.tolist())
+    pads = [rb for rb in range(nb) if rb not in present]
+    if pads:
+        browT = np.concatenate([browT, np.asarray(pads, np.int32)])
+        bcolT = np.concatenate([bcolT, np.zeros(len(pads), np.int32)])
+        perm = np.concatenate([perm, np.full(len(pads), -1, np.int64)])
+        reorder = np.argsort(browT, kind="stable")
+        browT, bcolT, perm = browT[reorder], bcolT[reorder], perm[reorder]
+    return perm, browT, bcolT
+
+
+def cb_spec_random(
+    in_features: int,
+    out_features: int,
+    *,
+    block_size: int = 128,
+    keep_fraction: float = 0.25,
+    seed: int = 0,
+) -> CBLinearSpec:
+    """Structural spec with a random block pattern (numpy-only, no tracing).
+
+    Magnitude pruning of a fresh Gaussian init keeps a uniformly random
+    block subset, so drawing the pattern directly is statistically
+    equivalent and lets specs be built eagerly (model construction time)
+    — required because scanned layers share one pattern and the dry-run
+    never materializes weights.
+    """
+    B = block_size
+    mb, nb = -(-out_features // B), -(-in_features // B)
+    rng = np.random.default_rng(seed)
+    norms = rng.random((mb, nb))
+    keep = max(1, int(round(keep_fraction * mb * nb)))
+    thresh = np.partition(norms.reshape(-1), -keep)[-keep]
+    mask = norms >= thresh
+    for rb in range(mb):
+        if not mask[rb].any():
+            mask[rb, int(np.argmax(norms[rb]))] = True
+    brow, bcol = np.nonzero(mask)
+    order = np.argsort(brow, kind="stable")
+    brow = brow[order].astype(np.int32)
+    bcol = bcol[order].astype(np.int32)
+    t_perm, browT, bcolT = _transpose_stream(brow, bcol, nb)
+    return CBLinearSpec(
+        in_features=in_features, out_features=out_features,
+        block_size=B, keep_fraction=keep_fraction,
+        brow=brow, bcol=bcol, mb=mb, nb=nb,
+        t_perm=t_perm, browT=browT, bcolT=bcolT,
+    )
+
+
+def cb_tiles_init(key: jax.Array, spec: CBLinearSpec, dtype=jnp.float32,
+                  scale: float | None = None) -> dict:
+    """Draw tile values for an existing spec (vmap/scan friendly)."""
+    scale = spec.in_features**-0.5 if scale is None else scale
+    B = spec.block_size
+    tiles = jax.random.normal(
+        key, (spec.num_tiles, B, B), jnp.float32
+    ) * scale
+    return {"tiles": tiles.astype(dtype)}
+
+
+def cb_linear_init(
+    key: jax.Array,
+    in_features: int,
+    out_features: int,
+    *,
+    block_size: int = 128,
+    keep_fraction: float = 0.25,
+    dtype=jnp.float32,
+    init_scale: float | None = None,
+) -> tuple[dict, CBLinearSpec]:
+    """Initialize a dense weight, block-prune it, and build the CB stream."""
+    scale = init_scale if init_scale is not None else in_features**-0.5
+    w = np.asarray(
+        jax.random.normal(key, (in_features, out_features), jnp.float32) * scale
+    )
+    a = w.T  # (out, in)
+    mask = block_sparsity_pattern(a, block_size, keep_fraction)
+    rr, cc = np.nonzero(np.repeat(np.repeat(mask, block_size, 0), block_size, 1)[
+        : a.shape[0], : a.shape[1]
+    ] & (a != 0))
+    stream = build_tile_stream(
+        rr, cc, a[rr, cc], (out_features, in_features), block_size
+    )
+    t_perm, browT, bcolT = _transpose_stream(
+        np.asarray(stream.brow), np.asarray(stream.bcol), stream.nb
+    )
+    spec = CBLinearSpec(
+        in_features=in_features,
+        out_features=out_features,
+        block_size=block_size,
+        keep_fraction=keep_fraction,
+        brow=np.asarray(stream.brow),
+        bcol=np.asarray(stream.bcol),
+        mb=stream.mb,
+        nb=stream.nb,
+        t_perm=t_perm,
+        browT=browT,
+        bcolT=bcolT,
+    )
+    params = {"tiles": jnp.asarray(stream.tiles, dtype)}
+    return params, spec
+
+
+def _stream_of(spec: CBLinearSpec, tiles: jax.Array) -> TileStream:
+    # NOTE: metadata stays numpy — creating jnp constants here would bind
+    # them to whatever trace is active (this runs inside scan/grad traces).
+    B = spec.block_size
+    return TileStream(
+        block_size=B, m=spec.out_features, n=spec.in_features,
+        mb=spec.mb, nb=spec.nb,
+        tiles=tiles, brow=spec.brow, bcol=spec.bcol,
+    )
+
+
+def _stream_of_T(spec: CBLinearSpec, tiles: jax.Array) -> TileStream:
+    B = spec.block_size
+    safe = np.maximum(spec.t_perm, 0)
+    tilesT = jnp.swapaxes(tiles[safe], -1, -2)
+    tilesT = jnp.where((spec.t_perm >= 0)[:, None, None], tilesT, 0.0)
+    return TileStream(
+        block_size=B, m=spec.in_features, n=spec.out_features,
+        mb=spec.nb, nb=spec.mb,
+        tiles=tilesT, brow=spec.browT, bcol=spec.bcolT,
+    )
+
+
+def make_cb_matmul(spec: CBLinearSpec, impl: str = "reference",
+                   interpret: bool | None = None):
+    """Build the differentiable ``(tiles, X) -> A @ X`` for this spec.
+
+    X: (in, N) -> Y: (out, N). The VJP's dX runs A^T's stream (same kernel,
+    transposed metadata); dW gathers (dY block-row, X block-col) pairs and
+    contracts per tile — both pure-XLA, so the backward pass is collective-
+    and layout-friendly under GSPMD.
+    """
+    from repro.kernels import ops
+
+    B = spec.block_size
+    brow = spec.brow  # numpy on purpose — see _stream_of
+    bcol = spec.bcol
+
+    def fwd_compute(tiles, X):
+        return ops.cb_spmm(_stream_of(spec, tiles), X, impl=impl,
+                           interpret=interpret)
+
+    @jax.custom_vjp
+    def matmul(tiles, X):
+        return fwd_compute(tiles, X)
+
+    def matmul_fwd(tiles, X):
+        return fwd_compute(tiles, X), (tiles, X)
+
+    def matmul_bwd(res, dY):
+        tiles, X = res
+        dY = dY.astype(jnp.float32)
+        # dX = A^T @ dY via the transposed stream (same SpMM kernel).
+        dX = ops.cb_spmm(_stream_of_T(spec, tiles), dY, impl=impl,
+                         interpret=interpret).astype(X.dtype)
+        # dA[t] = dY_blocks[brow[t]] @ X_blocks[bcol[t]]^T
+        N = X.shape[1]
+        Xp = jnp.pad(X.astype(jnp.float32), ((0, spec.nb * B - X.shape[0]), (0, 0)))
+        dYp = jnp.pad(dY, ((0, spec.mb * B - dY.shape[0]), (0, 0)))
+        Xb = Xp.reshape(spec.nb, B, N)
+        dYb = dYp.reshape(spec.mb, B, N)
+        d_tiles = jnp.einsum("tbn,tcn->tbc", dYb[brow], Xb[bcol])
+        return d_tiles.astype(tiles.dtype), dX
+
+    matmul.defvjp(matmul_fwd, matmul_bwd)
+    return matmul
+
+
+# custom_vjp closures must be constructed OUTSIDE any trace (constructing
+# them inside a scanned/grad-traced body leaks trace-local constants into
+# the later-staged bwd jaxpr). Cache one matmul per (spec identity, impl).
+_MATMUL_CACHE: dict = {}
+
+
+def _cached_matmul(spec: CBLinearSpec, impl: str, interpret: bool | None):
+    key = (id(spec), impl, interpret)
+    hit = _MATMUL_CACHE.get(key)
+    if hit is None:
+        hit = (make_cb_matmul(spec, impl=impl, interpret=interpret), spec)
+        _MATMUL_CACHE[key] = hit  # spec kept alive so id() stays unique
+    return hit[0]
+
+
+def cb_linear_apply(
+    params: dict,
+    spec: CBLinearSpec,
+    x: jax.Array,
+    *,
+    impl: str = "reference",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = x @ W for x of shape (..., in_features)."""
+    matmul = _cached_matmul(spec, impl, interpret)
+    lead = x.shape[:-1]
+    X = x.reshape(-1, spec.in_features).T  # (in, N)
+    Y = matmul(params["tiles"], X)         # (out, N)
+    return Y.T.reshape(*lead, spec.out_features).astype(x.dtype)
+
+
+def dense_equivalent(params: dict, spec: CBLinearSpec) -> jax.Array:
+    """Densified W (in, out) — test/debug utility."""
+    B = spec.block_size
+    A = jnp.zeros((spec.mb * B, spec.nb * B), params["tiles"].dtype)
+    brow = jnp.asarray(spec.brow)
+    bcol = jnp.asarray(spec.bcol)
+    ridx = (brow[:, None] * B + jnp.arange(B)[None, :]).reshape(-1)
+    out = A.at[ridx[:, None],
+               (bcol[:, None] * B + jnp.arange(B)[None, :])
+               .reshape(spec.num_tiles, 1, B)
+               .repeat(B, 1)
+               .reshape(-1, B)].add(
+        params["tiles"].reshape(-1, B)
+    )
+    return out[: spec.out_features, : spec.in_features].T

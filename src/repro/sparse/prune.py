@@ -1,0 +1,53 @@
+"""Block-structured magnitude pruning — produces CB-shaped weight sparsity.
+
+Whole B x B blocks are kept or dropped by Frobenius norm, so the surviving
+weight is exactly the block-sparse structure the CB kernels consume (the
+``pruned_weight`` regime of data/matrices.py). This is the standard
+block-pruning recipe (movement/magnitude pruning at block granularity) and
+is how the paper's SpMV technique becomes a *training/serving feature*
+rather than a standalone kernel demo.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def block_sparsity_pattern(
+    w: np.ndarray, block_size: int, keep_fraction: float
+) -> np.ndarray:
+    """Boolean (mb, nb) mask of surviving blocks (top-|keep| by Fro norm)."""
+    m, n = w.shape
+    B = block_size
+    mb, nb = -(-m // B), -(-n // B)
+    wp = np.zeros((mb * B, nb * B), dtype=w.dtype)
+    wp[:m, :n] = w
+    norms = np.square(
+        wp.reshape(mb, B, nb, B).transpose(0, 2, 1, 3)
+    ).sum(axis=(2, 3))
+    keep = max(1, int(round(keep_fraction * mb * nb)))
+    thresh = np.partition(norms.reshape(-1), -keep)[-keep]
+    mask = norms >= thresh
+    # Tie-breaking can keep a few extra blocks; trim deterministically.
+    extra = int(mask.sum()) - keep
+    if extra > 0:
+        flat = np.flatnonzero(mask.reshape(-1))
+        order = np.argsort(norms.reshape(-1)[flat], kind="stable")
+        mask.reshape(-1)[flat[order[:extra]]] = False
+    # Every block row must keep >= 1 block (row coverage for the kernel and
+    # a non-dead output row — mirrors build_tile_stream's padding).
+    for rb in range(mb):
+        if not mask[rb].any():
+            mask[rb, int(np.argmax(norms[rb]))] = True
+    return mask
+
+
+def block_magnitude_prune(
+    w: np.ndarray, block_size: int, keep_fraction: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (pruned dense weight, block mask)."""
+    m, n = w.shape
+    B = block_size
+    mask = block_sparsity_pattern(w, block_size, keep_fraction)
+    mb, nb = mask.shape
+    full = np.repeat(np.repeat(mask, B, axis=0), B, axis=1)[:m, :n]
+    return w * full, mask

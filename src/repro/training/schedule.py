@@ -1,0 +1,31 @@
+"""LR schedules: linear warmup + cosine decay (the LM-pretraining default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    """Returns step -> lr (traceable)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        progress = (step - warmup_steps) / jnp.maximum(
+            1.0, total_steps - warmup_steps
+        )
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = peak_lr * (
+            final_fraction
+            + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(lr_value: float):
+    def lr(step):
+        return jnp.full((), lr_value, jnp.float32)
+
+    return lr

@@ -1,0 +1,34 @@
+"""TrainState: params + optimizer state + step, as a registered pytree."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array          # () int32
+    params: Any
+    opt_state: Any
+    ef_buffers: Any | None = None   # int8-compression error feedback
+
+    @classmethod
+    def create(cls, params, optimizer, use_compression: bool = False):
+        from .grad_compression import init_ef_buffers
+
+        return cls(
+            step=jnp.zeros((), jnp.int32),
+            params=params,
+            opt_state=optimizer.init(params),
+            ef_buffers=init_ef_buffers(params) if use_compression else None,
+        )
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=["step", "params", "opt_state", "ef_buffers"],
+    meta_fields=[],
+)

@@ -1,0 +1,139 @@
+"""Distribution tests that need >1 device run in a subprocess with
+xla_force_host_platform_device_count (the main test process must keep the
+default single CPU device — see the dry-run contract).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=520,
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+def test_distributed_spmv_4dev():
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.cb_matrix import CBMatrix
+from repro.core import distributed as dist
+from repro.core.spmv_ref import dense_oracle
+from repro.data import matrices
+
+m, n = 160, 160
+r, c, v = matrices.power_law(m, n, seed=7)
+cb = CBMatrix.from_coo(r, c, v, (m, n), block_size=16, val_dtype=np.float32)
+sh = dist.shard_streams(cb, 4)
+assert sh.load_imbalance < 1.2, sh.device_nnz
+mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+y0 = dense_oracle(r, c, v.astype(np.float32), (m, n), x)
+for impl in ("pallas", "reference"):
+    y = dist.distributed_spmv(sh, jnp.asarray(x), mesh, impl=impl, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), y0, rtol=3e-4, atol=3e-4)
+print("OK")
+""")
+
+
+def test_sharded_train_step_matches_single_device():
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import ModelConfig
+from repro.models import Model, axis_rules, logical_to_sharding
+from repro.models.sharding import sanitize_shardings
+from repro.training import build_train_step, TrainState, OPTIMIZERS, warmup_cosine
+
+cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=256,
+                  attn_chunk=32, remat="none", dtype="float32")
+model = Model(cfg)
+opt = OPTIMIZERS["adamw"]()
+lr = warmup_cosine(1e-3, 2, 100)
+step = build_train_step(model, opt, lr)
+params, axes = model.init(jax.random.PRNGKey(0))
+state = TrainState.create(params, opt)
+toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 256)
+batch = {"tokens": toks, "targets": toks}
+
+# single-device result
+s_plain, m_plain = jax.jit(step)(state, batch)
+
+# sharded: data x model mesh
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with axis_rules(mesh):
+    psh = sanitize_shardings(jax.eval_shape(lambda: params),
+                             logical_to_sharding(axes, mesh), mesh)
+    from repro.training.optimizer import AdamWState
+    rep = NamedSharding(mesh, P())
+    ssh = TrainState(step=rep, params=psh,
+                     opt_state=AdamWState(mu=psh, nu=psh, count=rep),
+                     ef_buffers=None)
+    bsh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+    f = jax.jit(step, in_shardings=(ssh, bsh), out_shardings=(ssh, None))
+    s_shard, m_shard = f(state, batch)
+
+assert abs(float(m_plain["loss"]) - float(m_shard["loss"])) < 1e-4
+for a, b in zip(jax.tree_util.tree_leaves(s_plain.params),
+                jax.tree_util.tree_leaves(s_shard.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+print("OK")
+""")
+
+
+def test_compressed_cross_pod_sum():
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.training.grad_compression import compressed_cross_pod_sum, init_ef_buffers
+
+mesh = jax.make_mesh((2, 2), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+g_local = {"w": jnp.arange(8.0).reshape(2, 4) / 7.0}
+ef = init_ef_buffers(g_local)
+
+@partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+         check_vma=False)
+def run(g, e):
+    s, ne = compressed_cross_pod_sum(g, e, axis_name="pod")
+    return s, ne
+
+summed, new_ef = run(g_local, ef)
+# both pods contributed identical grads -> sum == 2x
+np.testing.assert_allclose(np.asarray(summed["w"]), 2 * np.asarray(g_local["w"]),
+                           rtol=0.02, atol=0.02)
+print("OK")
+""")
+
+
+def test_pipeline_two_stages():
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.runtime.pipeline import pipeline_forward
+
+mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+# stage s applies ws[s]: y = x @ w
+ws = jnp.stack([jnp.eye(8) * 2.0, jnp.eye(8) * 3.0])  # (S, 8, 8)
+
+def stage_fn(w, h):
+    return h @ w
+
+run = pipeline_forward(stage_fn, mesh, axis="pod")
+mbs = jnp.ones((4, 2, 8))   # 4 microbatches of (2, 8)
+out = run(ws, mbs)
+np.testing.assert_allclose(np.asarray(out), 6.0 * np.ones((4, 2, 8)), rtol=1e-5)
+print("OK")
+""", devices=2)

@@ -1,0 +1,130 @@
+"""Runtime: fault tolerance (simulated clocks), elasticity, serving engine."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.runtime import HeartbeatMonitor, RestartPolicy, plan_mesh
+from repro.runtime.elastic import reshard_instructions
+from repro.runtime.pipeline import bubble_fraction
+from repro.serving import Request, ServingEngine, greedy_decode
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_failure_detection_with_simulated_clock():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_hosts=3, timeout_s=10.0, clock=clock)
+    for step in range(3):
+        clock.t += 1.0
+        for h in range(3):
+            mon.heartbeat(step, host_id=h)
+    assert mon.check() == []
+    # host 2 goes silent
+    for step in range(3, 8):
+        clock.t += 3.0
+        mon.heartbeat(step, host_id=0)
+        mon.heartbeat(step, host_id=1)
+    assert mon.check() == [2]
+    assert mon.alive_hosts == [0, 1]
+    # no double-reporting
+    assert mon.check() == []
+
+
+def test_straggler_detection():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_hosts=1, straggler_factor=2.0, clock=clock)
+    for step in range(10):
+        clock.t += 1.0
+        mon.heartbeat(step)
+    clock.t += 10.0   # one very slow step
+    mon.heartbeat(10)
+    assert any(s[0] == 10 for s in mon.stragglers)
+
+
+def test_restart_policy():
+    class FakeCk:
+        def latest_step(self):
+            return 40
+
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_hosts=4, timeout_s=5.0, clock=clock)
+    for h in range(4):
+        mon.heartbeat(0, host_id=h)
+    clock.t += 100.0
+    mon.heartbeat(1, host_id=0)
+    mon.check()
+    dec = RestartPolicy(FakeCk(), mon).on_failure()
+    assert dec.restore_step == 40
+    assert dec.replay_from_step == 40
+    assert dec.needs_remesh
+    assert dec.surviving_hosts == [0]
+
+
+def test_plan_mesh_shapes():
+    p = plan_mesh(256, prefer_model=16)
+    assert p.shape == (16, 16) and p.dropped_devices == 0
+    p = plan_mesh(512, prefer_model=16)
+    assert p.shape == (2, 16, 16)
+    assert p.axis_names == ("pod", "data", "model")
+    p = plan_mesh(240, prefer_model=16)   # lost a host: 240 = 15*16
+    assert p.num_devices == 240
+    p = plan_mesh(7, prefer_model=16)
+    assert p.num_devices <= 7
+    ri = reshard_instructions(plan_mesh(512), plan_mesh(256))
+    assert "device_put" in ri["mechanism"]
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(2, 8) == 1 / 9
+    assert bubble_fraction(1, 8) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=128,
+                      attn_chunk=32, remat="none", dtype="float32")
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_engine_matches_direct_decode():
+    """Continuous batching must produce the same tokens as greedy_decode."""
+    model, params = _tiny_model()
+    prompt = np.array([3, 14, 15, 9], np.int32)
+    direct = np.asarray(
+        greedy_decode(model, params, jnp.asarray(prompt)[None, :], 5)
+    )[0]
+
+    eng = ServingEngine(model, params, slots=3, max_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    # interference: other requests share the batch
+    eng.submit(Request(uid=1, prompt=np.array([7, 7], np.int32),
+                       max_new_tokens=3))
+    eng.submit(Request(uid=2, prompt=np.array([100], np.int32),
+                       max_new_tokens=7))
+    done = {r.uid: r for r in eng.run_until_done()}
+    np.testing.assert_array_equal(np.asarray(done[0].generated), direct)
+
+
+def test_engine_slot_reuse():
+    model, params = _tiny_model()
+    eng = ServingEngine(model, params, slots=1, max_len=64)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=np.array([uid + 1], np.int32),
+                           max_new_tokens=2))
+    done = eng.run_until_done()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.generated) == 2 for r in done)
