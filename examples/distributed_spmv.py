@@ -13,6 +13,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import CBMatrix  # noqa: E402
 from repro.core import distributed as dist  # noqa: E402
 from repro.core.spmv_ref import dense_oracle  # noqa: E402
@@ -32,8 +33,7 @@ def main():
           f"{sharded.device_nnz.tolist()} "
           f"(imbalance {sharded.load_imbalance:.3f})")
 
-    mesh = jax.make_mesh((n_dev,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("model",))
     x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
     y = dist.distributed_spmv(sharded, jnp.asarray(x), mesh,
                               impl="reference")

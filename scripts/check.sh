@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Repo health check: the tier-1 gate plus a fast benchmark smoke.
+#
+#   scripts/check.sh            # full tier-1 suite + fig34 smoke
+#   scripts/check.sh --fast     # skip slow/system tests (quick iteration)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow and not system")
+fi
+
+echo "== tier-1: pytest ${PYTEST_ARGS[*]} =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo "== benchmark smoke: fig34 (distribution + balance) =="
+python -m benchmarks.run --scale small --only fig34

@@ -1,0 +1,158 @@
+"""Version-guarded JAX compatibility shims.
+
+The repo tracks current JAX APIs but must run on every toolchain the
+container ships (currently 0.4.37). Every API whose name or signature
+drifted between JAX 0.4.x and newer releases is funneled through this
+module so the rest of the codebase is version-agnostic:
+
+  * ``tpu_compiler_params``  — ``pltpu.CompilerParams`` was called
+    ``TPUCompilerParams`` before jax 0.6.
+  * ``pallas_call_tpu``      — one entry point for every Pallas TPU call
+    site; centralizes ``dimension_semantics``/``interpret`` handling so
+    kernels never touch ``compiler_params`` directly.
+  * ``make_mesh`` / ``mesh_axis_types`` — ``jax.sharding.AxisType`` and
+    the ``axis_types=`` kwarg of ``jax.make_mesh`` don't exist in 0.4.x.
+  * ``shard_map``            — lives at ``jax.experimental.shard_map``
+    with a ``check_rep`` kwarg in 0.4.x, at ``jax.shard_map`` with
+    ``check_vma`` in newer releases.
+
+Nothing here may import heavyweight repro modules; kernels and launch
+code import *us*.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ---------------------------------------------------------------------------
+# Pallas compiler params
+# ---------------------------------------------------------------------------
+
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both and
+# prefer the modern name when present.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def tpu_compiler_params(
+    *, dimension_semantics: Sequence[str] | None = None, **kwargs: Any
+):
+    """Build the TPU compiler-params object for this JAX version."""
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _CompilerParams(**kwargs)
+
+
+def pallas_call_tpu(
+    kernel: Callable,
+    *,
+    out_shape,
+    interpret: bool,
+    grid=None,
+    grid_spec=None,
+    in_specs=None,
+    out_specs=None,
+    dimension_semantics: Sequence[str] | None = None,
+    name: str | None = None,
+    **kwargs: Any,
+):
+    """``pl.pallas_call`` with version-stable TPU compiler params.
+
+    Exactly one of ``grid_spec`` (e.g. ``pltpu.PrefetchScalarGridSpec``)
+    or the ``grid``/``in_specs``/``out_specs`` triple must be given —
+    mirroring ``pl.pallas_call`` itself. Returns the callable to apply to
+    the operands.
+
+    ``interpret`` is deliberately required: our kernels default it per
+    backend (interpret off-TPU, compiled on TPU) and a silent default
+    here would make a future TPU call site run the interpreter — slow
+    with no error. Unsupplied grid/spec arguments are left to
+    ``pl.pallas_call``'s own defaults rather than forwarded as ``None``.
+    """
+    call_kwargs: dict[str, Any] = dict(
+        out_shape=out_shape,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=dimension_semantics
+        ),
+        interpret=interpret,
+        name=name,
+        **kwargs,
+    )
+    if grid_spec is not None:
+        if grid is not None or in_specs is not None or out_specs is not None:
+            raise ValueError("pass either grid_spec or grid/in_specs/out_specs")
+        call_kwargs["grid_spec"] = grid_spec
+    else:
+        for key, value in (("grid", grid), ("in_specs", in_specs),
+                           ("out_specs", out_specs)):
+            if value is not None:
+                call_kwargs[key] = value
+    return pl.pallas_call(kernel, **call_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def mesh_axis_types(num_axes: int) -> dict[str, Any]:
+    """kwargs enabling explicit Auto axis types where the API supports it.
+
+    Returns ``{}`` on JAX 0.4.x (where every mesh axis is implicitly
+    Auto), so call sites can always splat the result into ``make_mesh``.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None or not _MAKE_MESH_TAKES_AXIS_TYPES:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * num_axes}
+
+
+def make_mesh(
+    axis_shapes: Sequence[int], axis_names: Sequence[str], **kwargs: Any
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types on versions that take them."""
+    return jax.make_mesh(
+        axis_shapes, axis_names, **mesh_axis_types(len(axis_shapes)), **kwargs
+    )
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+    **kwargs: Any,
+):
+    """Version-stable ``shard_map`` (supports ``functools.partial`` use).
+
+    ``check_vma`` follows the modern spelling; it maps onto ``check_rep``
+    for JAX 0.4.x where shard_map still lives under ``jax.experimental``.
+    """
+    modern = getattr(jax, "shard_map", None)
+    if modern is not None:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return modern(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)

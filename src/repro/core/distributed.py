@@ -134,12 +134,13 @@ def distributed_spmv(
     """y = A @ x with A's blocks pq-balanced over ``axis``; x replicated."""
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro.kernels import ops
 
     dev_spec = jax.tree_util.tree_map(lambda _: P(axis), sharded.streams)
 
     @partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(dev_spec, P()),
         out_specs=P(),

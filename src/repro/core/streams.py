@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from . import column_agg as column_agg_mod
+from .aggregation import coord_bits
 from .cb_matrix import CBMatrix
 from .formats import FMT_COO, FMT_CSR, FMT_DENSE
 
@@ -106,10 +107,16 @@ def _block_x_indices(cb: CBMatrix, brow: int, bcol: int) -> np.ndarray:
     ).astype(np.int32)
 
 
-def build_streams(cb: CBMatrix, coord_bits: int | None = None) -> SpMVStreams:
-    """Derive the typed kernel streams from a CBMatrix (host-side)."""
+def build_streams(cb: CBMatrix) -> SpMVStreams:
+    """Derive the typed kernel streams from a CBMatrix (host-side).
+
+    The packed-coordinate bit layout is fixed by ``aggregation.coord_bits``
+    — the kernels and oracles recompute it from the block size, so it is
+    deliberately not a parameter here (an encoder-side override would
+    silently desync the decoders).
+    """
     B = cb.block_size
-    bits = coord_bits or max(1, (B - 1).bit_length())
+    bits = coord_bits(B)
     m, n = cb.shape
     mb = -(-m // B)
     vdt = cb.val_dtype

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_call_tpu
+
 
 def _kernel_prefetched_x(bcol_ref, tiles_ref, x_ref, out_ref):
     """x block arrives via scalar-prefetch-driven DMA (non-colagg path)."""
@@ -71,13 +73,11 @@ def block_dense_spmv_prefetch(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i, bcol: (i, 0)),
     )
-    return pl.pallas_call(
+    return pallas_call_tpu(
         _kernel_prefetched_x,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
         name="cb_block_dense_spmv_prefetch",
     )(bcol, tiles, x_blocks)
@@ -92,7 +92,7 @@ def block_dense_spmv_gathered(
 ) -> jax.Array:
     """Per-block partials, x pre-gathered (column-aggregation path)."""
     nd, B, _ = tiles.shape
-    return pl.pallas_call(
+    return pallas_call_tpu(
         _kernel_gathered_x,
         grid=(nd,),
         in_specs=[
@@ -101,9 +101,7 @@ def block_dense_spmv_gathered(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
         name="cb_block_dense_spmv_gathered",
     )(tiles, xg)

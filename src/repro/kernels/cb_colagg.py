@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas_call_tpu
 
 
 def _panel_kernel(panel_ref, xg_ref, out_ref):
@@ -43,7 +44,7 @@ def panel_spmv(
 ) -> jax.Array:
     """Per-panel partial y tiles — (np_, B) float32."""
     np_, B, Kp = panels.shape
-    return pl.pallas_call(
+    return pallas_call_tpu(
         _panel_kernel,
         grid=(np_,),
         in_specs=[
@@ -52,9 +53,7 @@ def panel_spmv(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((np_, B), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
         name="cb_colagg_panel_spmv",
     )(panels, xg)

@@ -28,11 +28,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_call_tpu
+from repro.core.aggregation import coord_bits
+
 
 def _decode(codes, B):
-    """Alg. 3 lines 11-12, generalized: row = code & (B-1), col = code >> bits."""
-    bits = max(1, (B - 1).bit_length())
-    rows = codes & (B - 1)
+    """Alg. 3 lines 11-12, generalized: row = code & mask, col = code >> bits.
+
+    The mask is ``(1 << bits) - 1``, NOT ``B - 1``: for non-power-of-two
+    block sizes (e.g. B=24, bits=5) ``B - 1`` has holes and corrupts rows.
+    """
+    bits = coord_bits(B)
+    rows = codes & ((1 << bits) - 1)
     cols = codes >> bits
     return rows, cols
 
@@ -89,13 +96,11 @@ def coo_spmv_prefetch(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i, bcol: (i, 0)),
     )
-    return pl.pallas_call(
+    return pallas_call_tpu(
         functools.partial(_coo_kernel_prefetched_x, block_size=B),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, B), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
         name="cb_coo_spmv_prefetch",
     )(bcol, codes, vals, x_blocks)
@@ -112,7 +117,7 @@ def coo_spmv_gathered(
 ) -> jax.Array:
     nc, Ep = codes.shape
     B = block_size
-    return pl.pallas_call(
+    return pallas_call_tpu(
         functools.partial(_coo_kernel_gathered_x, block_size=B),
         grid=(nc,),
         in_specs=[
@@ -122,9 +127,7 @@ def coo_spmv_gathered(
         ],
         out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nc, B), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
         name="cb_coo_spmv_gathered",
     )(codes, vals, xg)

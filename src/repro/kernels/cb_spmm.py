@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_call_tpu
+
 
 def _spmm_kernel(brow_ref, bcol_ref, tiles_ref, x_ref, out_ref):
     del bcol_ref  # consumed by the X index map
@@ -69,13 +71,11 @@ def tile_spmm(
             (1, B, block_n), lambda j, i, brow, bcol: (brow[i], 0, j)
         ),
     )
-    return pl.pallas_call(
+    return pallas_call_tpu(
         _spmm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb, B, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "arbitrary"),
         interpret=interpret,
         name="cb_tile_spmm",
     )(brow, bcol, tiles, Xb)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.aggregation import coord_bits
 from repro.core.streams import SpMVStreams, TileStream
 
 
@@ -43,12 +44,14 @@ def coo_spmv(codes: jax.Array, vals: jax.Array, brow: jax.Array,
     """Element-list SpMV with the paper's packed coords (Alg. 3 semantics).
 
     codes/vals/xg: (nc, E); padding has vals == 0. Decode
-    ``row = code & (B-1)`` (Alg. 3's ``& 15`` generalized) and scatter-add
-    products into the block-local row.
+    ``row = code & ((1 << bits) - 1)`` (Alg. 3's ``& 15`` generalized —
+    a full bit mask, since ``B - 1`` has holes for non-power-of-two B)
+    and scatter-add products into the block-local row.
     """
     acc = _acc_dtype(vals.dtype, xg.dtype)
     B = block_size
-    rows = codes & (B - 1)
+    bits = coord_bits(B)
+    rows = codes & ((1 << bits) - 1)
     prod = vals.astype(acc) * xg.astype(acc)
     # one-hot scatter within each block, then scatter blocks into y
     onehot = (rows[:, :, None] == jnp.arange(B, dtype=codes.dtype)).astype(acc)

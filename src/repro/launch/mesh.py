@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeConfig
 
 SINGLE_POD = (16, 16)
@@ -27,10 +28,7 @@ MULTI_POD = (2, 16, 16)
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def data_width(mesh: jax.sharding.Mesh) -> int:

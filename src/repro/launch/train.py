@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
 from repro.data.synthetic import DataConfig, SyntheticTokenStream
@@ -43,10 +44,7 @@ def main() -> None:
     n_dev = len(jax.devices())
     plan = plan_mesh(n_dev, prefer_model=min(16, n_dev),
                      global_batch=args.global_batch)
-    mesh = jax.make_mesh(
-        plan.shape, plan.axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.shape),
-    )
+    mesh = compat.make_mesh(plan.shape, plan.axis_names)
     print(f"mesh: {dict(zip(plan.axis_names, plan.shape))}  arch: {cfg.name}")
 
     model = Model(cfg)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_forward(
     stage_fn: Callable,            # (stage_params, h) -> h
@@ -41,7 +43,7 @@ def pipeline_forward(
     S = mesh.shape[axis]
 
     @partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(P(axis), P()),    # params sharded by stage; data replicated
         out_specs=P(),

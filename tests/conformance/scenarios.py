@@ -1,0 +1,189 @@
+"""Scenario grid for the CB-SpMV conformance harness.
+
+A *scenario* is one fully-specified CB preprocessing configuration over
+one structural sparsity regime: (structure family, matrix shape, block
+size, column-aggregation mode, value dtype, format thresholds). SpMV
+correctness is regime-dependent — uniform, power-law, banded and
+clustered sparsity drive different block formats, balance behaviour and
+colagg decisions — so the grid sweeps the regimes instead of point
+examples. Tests parametrize over ``spmv_scenarios()`` (or the smaller
+``SPMM`` selection) and get a ready-built matrix via ``Scenario.build``
+/ ``build_cb``.
+
+Structures beyond the synthetic corpus families:
+
+  * ``empty_rows_cols``  — bands of fully-empty rows AND columns (empty
+    block-row panels; compacted widths of zero under colagg);
+  * ``single_element``   — one nnz in a ragged corner block;
+  * ``ragged_tail``      — dense-ish band on a shape not divisible by B.
+
+Matrices are kept small (~150 rows) so the whole grid runs in interpret
+mode in seconds per case.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import CBMatrix
+from repro.core.formats import FormatThresholds
+from repro.data import matrices
+
+BLOCK_SIZES = (8, 16, 24)
+COLAGG_MODES = ("auto", True, False)
+
+
+# ---------------------------------------------------------------------------
+# structure builders: name -> (rows, cols, vals, shape)
+# ---------------------------------------------------------------------------
+
+def _uniform(seed=0):
+    return (*matrices.uniform_random(152, 136, density=0.02, seed=seed),
+            (152, 136))
+
+
+def _power_law(seed=0):
+    return (*matrices.power_law(144, 144, seed=seed), (144, 144))
+
+
+def _banded(seed=0):
+    return (*matrices.banded(160, 128, seed=seed), (160, 128))
+
+
+def _block_clustered(seed=0):
+    return (*matrices.block_clustered(144, 120, seed=seed), (144, 120))
+
+
+def _empty_rows_cols(seed=0):
+    """Nonzeros confined to scattered row/col stripes: whole block-row
+    panels and whole column blocks stay empty."""
+    rng = np.random.default_rng(seed)
+    m, n = 160, 144
+    live_rows = np.r_[np.arange(0, 24), np.arange(96, 120)]
+    live_cols = np.r_[np.arange(8, 40), np.arange(120, 136)]
+    nnz = 220
+    rows = rng.choice(live_rows, nnz)
+    cols = rng.choice(live_cols, nnz)
+    key = rows * n + cols
+    _, idx = np.unique(key, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+    vals = rng.standard_normal(len(rows))
+    return rows.astype(np.int64), cols.astype(np.int64), vals, (m, n)
+
+
+def _single_element(seed=0):
+    """One nnz, placed in the ragged bottom-right corner block."""
+    del seed
+    m, n = 90, 70
+    return (np.array([m - 1], np.int64), np.array([n - 1], np.int64),
+            np.array([2.5]), (m, n))
+
+
+def _ragged_tail(seed=0):
+    """Band structure on dimensions that are not multiples of any B."""
+    return (*matrices.banded(131, 93, bandwidth=11, fill=0.8, seed=seed),
+            (131, 93))
+
+
+STRUCTURES = {
+    "uniform": _uniform,
+    "power_law": _power_law,
+    "banded": _banded,
+    "block_clustered": _block_clustered,
+    "empty_rows_cols": _empty_rows_cols,
+    "single_element": _single_element,
+    "ragged_tail": _ragged_tail,
+}
+
+
+# ---------------------------------------------------------------------------
+# forced-format thresholds
+# ---------------------------------------------------------------------------
+
+def forced_thresholds(fmt: str, block_size: int) -> FormatThresholds:
+    """Thresholds steering (nearly) every block into one intra-block format.
+
+    Exact at the boundaries that matter: under ``coo`` only a completely
+    full block escapes to CSR; under ``dense`` only single-element blocks
+    stay CSR (``select_formats`` requires th1 >= 1).
+    """
+    area = block_size * block_size
+    if fmt == "coo":
+        return FormatThresholds(th1=area, th2=area)
+    if fmt == "csr":
+        return FormatThresholds(th1=1, th2=area)
+    if fmt == "dense":
+        return FormatThresholds(th1=1, th2=1)
+    raise ValueError(f"unknown forced format {fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# the scenario record + grids
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    structure: str
+    block_size: int
+    colagg: object = "auto"        # "auto" | True | False
+    dtype: str = "float32"         # numpy dtype name
+    forced_fmt: str | None = None  # None = paper thresholds
+    seed: int = 11
+
+    @property
+    def name(self) -> str:
+        colagg = {True: "on", False: "off"}.get(self.colagg, "auto")
+        parts = [self.structure, f"B{self.block_size}", f"colagg_{colagg}"]
+        if self.dtype != "float32":
+            parts.append(self.dtype)
+        if self.forced_fmt:
+            parts.append(f"force_{self.forced_fmt}")
+        return "-".join(parts)
+
+    def build_coo(self):
+        rows, cols, vals, shape = STRUCTURES[self.structure](seed=self.seed)
+        return rows, cols, vals.astype(self.dtype), shape
+
+    def thresholds(self) -> FormatThresholds:
+        if self.forced_fmt is None:
+            return FormatThresholds()
+        return forced_thresholds(self.forced_fmt, self.block_size)
+
+    def build(self) -> CBMatrix:
+        rows, cols, vals, shape = self.build_coo()
+        return CBMatrix.from_coo(
+            rows, cols, vals, shape,
+            block_size=self.block_size,
+            val_dtype=np.dtype(self.dtype),
+            thresholds=self.thresholds(),
+            use_column_aggregation=self.colagg,
+        )
+
+
+def spmv_scenarios() -> list[Scenario]:
+    """The conformance grid for cb_spmv.
+
+    Full structure x block-size x colagg sweep at float32 with the paper
+    thresholds, plus forced-format and float64 slices so every
+    intra-block format x colagg x B cell is exercised without blowing up
+    the cross product.
+    """
+    grid: list[Scenario] = []
+    for structure in STRUCTURES:
+        for B in BLOCK_SIZES:
+            for colagg in COLAGG_MODES:
+                grid.append(Scenario(structure, B, colagg))
+    # forced formats: every format x colagg on/off x every block size
+    for fmt in ("coo", "csr", "dense"):
+        for B in BLOCK_SIZES:
+            for colagg in (True, False):
+                grid.append(Scenario("uniform", B, colagg, forced_fmt=fmt))
+    # float64 values through the full pipeline
+    for B in BLOCK_SIZES:
+        grid.append(Scenario("power_law", B, "auto", dtype="float64"))
+    return grid
+
+
+def scenario_ids(scenarios: list[Scenario]) -> list[str]:
+    return [s.name for s in scenarios]

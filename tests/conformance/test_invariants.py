@@ -1,0 +1,126 @@
+"""Structural invariants of the CB pipeline, checked across the grid.
+
+Stream invariants: the kernel-facing typed streams must encode exactly
+the same matrix as the portable CBMatrix — in particular every stream's
+``*_xidx`` gather indices must fold the column-aggregation restore maps
+(``cb.global_x_index``) element-for-element, and padding slots must
+carry zero values so they cannot contribute.
+
+Balance invariants: the Alg. 2 slot permutation is only a *schedule* —
+it must preserve the nnz multiset, place every real block exactly once,
+keep group sizes uniform, and its reported group loads must match the
+slot assignment.
+"""
+import numpy as np
+import pytest
+
+from repro.core import balance
+from repro.core.aggregation import coord_bits
+from repro.core.formats import FMT_COO, FMT_CSR, FMT_DENSE
+from repro.core.streams import build_streams
+
+from .scenarios import Scenario, scenario_ids
+
+pytestmark = pytest.mark.conformance
+
+# A structural slice of the grid is enough here: these checks are about
+# metadata plumbing, not numerics, so one dtype and auto thresholds.
+INVARIANT_SCENARIOS = [
+    Scenario(structure, B, colagg)
+    for structure in ("uniform", "power_law", "empty_rows_cols",
+                      "single_element", "ragged_tail")
+    for B in (8, 16, 24)
+    for colagg in (True, False)
+]
+_IDS = scenario_ids(INVARIANT_SCENARIOS)
+
+
+@pytest.mark.parametrize("scn", INVARIANT_SCENARIOS, ids=_IDS)
+def test_stream_xidx_folds_restore_cols(scn):
+    cb = scn.build()
+    s = build_streams(cb)
+    B = cb.block_size
+    bits = coord_bits(B)
+    mask = (1 << bits) - 1
+
+    di = pi = ci = 0
+    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
+        gidx = cb.global_x_index(brow, bcol, c)
+        if fmt == FMT_DENSE:
+            assert int(s.dense_brow[di]) == brow
+            # every element's column maps to the same global x index the
+            # stream's per-tile gather row carries
+            np.testing.assert_array_equal(s.dense_xidx[di][c], gidx)
+            di += 1
+        elif fmt == FMT_CSR:
+            assert int(s.panel_brow[pi]) == brow
+            ucols, rank = np.unique(c, return_inverse=True)
+            np.testing.assert_array_equal(s.panel_xidx[pi][rank], gidx)
+            pi += 1
+        elif fmt == FMT_COO:
+            assert int(s.coo_brow[ci]) == brow
+            codes = np.asarray(s.coo_codes[ci][: len(c)])
+            np.testing.assert_array_equal(codes & mask, r)
+            np.testing.assert_array_equal(codes >> bits, c)
+            np.testing.assert_array_equal(s.coo_xidx[ci][: len(c)], gidx)
+            ci += 1
+    assert (di, pi, ci) == (s.num_dense, s.num_panel, s.num_coo)
+
+
+@pytest.mark.parametrize("scn", INVARIANT_SCENARIOS, ids=_IDS)
+def test_stream_padding_is_inert(scn):
+    """Padded tails of panel/coo rows must hold zero values."""
+    cb = scn.build()
+    s = build_streams(cb)
+    widths = {}
+    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
+        if fmt == FMT_CSR:
+            widths.setdefault("panel", []).append(len(np.unique(c)))
+        elif fmt == FMT_COO:
+            widths.setdefault("coo", []).append(len(v))
+    for i, k in enumerate(widths.get("panel", [])):
+        assert np.all(np.asarray(s.panel_vals[i])[:, k:] == 0)
+    for i, e in enumerate(widths.get("coo", [])):
+        assert np.all(np.asarray(s.coo_vals[i])[e:] == 0)
+
+
+@pytest.mark.parametrize("scn", INVARIANT_SCENARIOS, ids=_IDS)
+def test_balance_slot_permutation_preserves_nnz_multiset(scn):
+    rows, cols, vals, shape = scn.build_coo()
+    cb = scn.build()
+    from repro.core.blocking import partition_coo
+
+    agg_cols = cb.colagg.new_cols if cb.colagg.applied else cols
+    part = partition_coo(rows, agg_cols, vals, shape, cb.block_size)
+
+    real = cb.nnz_per_blk[cb.nnz_per_blk > 0]
+    # the permuted metadata holds exactly the partition's nnz multiset
+    assert sorted(real.tolist()) == sorted(part.nnz_per_blk.tolist())
+    assert int(real.sum()) == part.nnz == cb.nnz
+
+    res = cb.balance_result
+    assert len(cb.blk_row_idx) == res.num_groups * res.group_size
+    # every real block placed exactly once
+    placed = res.slots[res.slots >= 0]
+    assert sorted(placed.tolist()) == list(range(part.num_blocks))
+    # reported group loads match the slot assignment
+    for g in range(res.num_groups):
+        slot = res.slots[g * res.group_size : (g + 1) * res.group_size]
+        got = part.nnz_per_blk[slot[slot >= 0]].sum()
+        assert int(got) == int(res.group_loads[g])
+    # greedy LPT bound: max load <= optimal-lower-bound + max block
+    if part.num_blocks:
+        bound = part.nnz_per_blk.sum() / res.num_groups + part.nnz_per_blk.max()
+        assert res.group_loads.max() <= bound
+
+
+def test_apply_balance_pads_with_sentinels():
+    res = balance.tb_load_balance(np.array([5, 3, 1]), warps_per_tb=4)
+    brow, fmtcode = balance.apply_balance(
+        res, np.array([7, 8, 9]), np.array([0, 1, 2], np.uint8),
+        pad_values=(0, FMT_COO),
+    )
+    assert len(brow) == 4
+    pad_mask = res.slots < 0
+    assert np.all(fmtcode[pad_mask] == FMT_COO)
+    assert sorted(brow[~pad_mask].tolist()) == [7, 8, 9]

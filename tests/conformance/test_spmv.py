@@ -1,0 +1,77 @@
+"""SpMV conformance: every execution path must agree on every scenario.
+
+For each scenario in the grid:
+  * ``CBMatrix.to_dense()`` must round-trip the COO input exactly
+    (the preprocessing pipeline is lossless);
+  * ``impl="reference"`` (pure XLA) and ``impl="pallas"`` (interpret)
+    must agree to <= 1e-5 relative tolerance — the cross-implementation
+    contract every later perf PR is verified against;
+  * both must match the independent dense oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spmv_ref import dense_oracle, spmv_ref
+from repro.core.streams import build_streams
+from repro.kernels import ops
+
+from .scenarios import scenario_ids, spmv_scenarios
+
+pytestmark = pytest.mark.conformance
+
+SCENARIOS = spmv_scenarios()
+
+
+def _dense_of(rows, cols, vals, shape):
+    d = np.zeros(shape, np.asarray(vals).dtype)
+    np.add.at(d, (rows, cols), vals)
+    return d
+
+
+@pytest.mark.parametrize("scn", SCENARIOS, ids=scenario_ids(SCENARIOS))
+def test_cb_roundtrip_and_impl_agreement(scn):
+    rows, cols, vals, shape = scn.build_coo()
+    cb = scn.build()
+
+    # --- lossless preprocessing: CB -> dense == COO -> dense -------------
+    np.testing.assert_allclose(
+        cb.to_dense(), _dense_of(rows, cols, vals, shape),
+        rtol=1e-6, atol=1e-6,
+    )
+
+    # --- cross-implementation agreement ----------------------------------
+    streams = build_streams(cb).device_put()
+    x = np.random.default_rng(3).standard_normal(shape[1]).astype(np.float32)
+    y_ref = np.asarray(ops.cb_spmv(streams, jnp.asarray(x), impl="reference"))
+    y_pl = np.asarray(
+        ops.cb_spmv(streams, jnp.asarray(x), impl="pallas", interpret=True)
+    )
+    np.testing.assert_allclose(y_pl, y_ref, rtol=1e-5, atol=1e-5)
+
+    # --- both match the CB-independent oracle ----------------------------
+    expected = dense_oracle(rows, cols, vals.astype(np.float32), shape, x)
+    np.testing.assert_allclose(y_ref, expected, rtol=3e-4, atol=3e-4)
+
+    # --- the numpy Alg. 3/4 walker agrees too ----------------------------
+    np.testing.assert_allclose(
+        spmv_ref(cb, x), expected, rtol=3e-4, atol=3e-4
+    )
+
+
+def test_grid_covers_all_formats_and_modes():
+    """The grid itself must exercise every format x colagg x block size."""
+    from repro.core.formats import FMT_COO, FMT_CSR, FMT_DENSE
+
+    seen: set[tuple[int, bool, int]] = set()
+    for scn in SCENARIOS:
+        cb = scn.build()
+        fmts = cb.type_per_blk[cb.nnz_per_blk > 0]
+        for fmt in np.unique(fmts):
+            seen.add((int(fmt), bool(cb.colagg.applied), cb.block_size))
+    for fmt in (FMT_COO, FMT_CSR, FMT_DENSE):
+        for colagg in (True, False):
+            for B in (8, 16, 24):
+                assert (fmt, colagg, B) in seen, (
+                    f"grid gap: fmt={fmt} colagg={colagg} B={B}"
+                )

@@ -1,0 +1,83 @@
+"""CBMatrix storage accounting and ``stats()`` across the scenario grid.
+
+``nbytes_structure`` feeds the paper's §4.4.1 storage comparison and the
+benchmarks; if its totals drift from the real array sizes, every storage
+figure lies. ``stats()`` drives format/balance reporting.
+"""
+import numpy as np
+import pytest
+
+from repro.core.formats import FMT_COO, FMT_CSR, FMT_DENSE
+
+from .scenarios import Scenario, scenario_ids
+
+pytestmark = pytest.mark.conformance
+
+STORAGE_SCENARIOS = [
+    Scenario(structure, B, colagg, dtype=dtype)
+    for structure in ("uniform", "power_law", "banded", "empty_rows_cols",
+                      "single_element")
+    for B in (8, 16, 24)
+    for colagg, dtype in (("auto", "float32"), (True, "float32"),
+                          (False, "float64"))
+]
+_IDS = scenario_ids(STORAGE_SCENARIOS)
+
+
+@pytest.mark.parametrize("scn", STORAGE_SCENARIOS, ids=_IDS)
+def test_nbytes_structure_accounts_every_byte(scn):
+    cb = scn.build()
+    sizes = cb.nbytes_structure()
+
+    meta = (cb.blk_row_idx.nbytes + cb.blk_col_idx.nbytes
+            + cb.nnz_per_blk.nbytes + cb.type_per_blk.nbytes
+            + cb.vp_per_blk.nbytes)
+    assert sizes["high_level_metadata"] == meta
+    assert sizes["packed_data"] == cb.packed.nbytes
+    if cb.colagg.applied:
+        assert sizes["column_agg_maps"] == (
+            cb.colagg.restore_cols.nbytes + cb.colagg.cols_offset.nbytes
+        )
+    else:
+        assert sizes["column_agg_maps"] == 0
+    assert sizes["total"] == (
+        sizes["high_level_metadata"] + sizes["column_agg_maps"]
+        + sizes["packed_data"]
+    )
+    # every virtual-pointer region lives inside the packed buffer
+    real = cb.nnz_per_blk > 0
+    assert np.all(cb.vp_per_blk[real] >= 0)
+    assert np.all(cb.vp_per_blk[real] < max(1, cb.packed.nbytes))
+    # packed data can never undercut the raw values it stores
+    assert sizes["packed_data"] >= cb.nnz * cb.val_dtype.itemsize
+
+
+@pytest.mark.parametrize("scn", STORAGE_SCENARIOS, ids=_IDS)
+def test_stats_consistency(scn):
+    cb = scn.build()
+    st = cb.stats()
+
+    assert st["nnz"] == cb.nnz > 0
+    assert st["block_size"] == scn.block_size
+    assert st["num_blocks"] == cb.num_blocks
+    # format counts partition the real blocks
+    assert (st["fmt_coo"] + st["fmt_csr"] + st["fmt_dense"]
+            == st["num_blocks"])
+    for key, code in (("fmt_coo", FMT_COO), ("fmt_csr", FMT_CSR),
+                      ("fmt_dense", FMT_DENSE)):
+        real = cb.nnz_per_blk > 0
+        assert st[key] == int(np.sum(cb.type_per_blk[real] == code))
+    assert 0.0 <= st["super_sparse_fraction"] <= 1.0
+    assert st["tb_load_std"] >= 0.0
+    # max/mean >= 1 by definition; bounded by the LPT guarantee
+    res = cb.balance_result
+    assert st["tb_load_imbalance"] >= 1.0 or st["num_blocks"] == 0
+    if res.group_loads.sum() > 0:
+        mean = res.group_loads.mean()
+        real_nnz = cb.nnz_per_blk[cb.nnz_per_blk > 0]
+        assert st["tb_load_imbalance"] <= (mean + real_nnz.max()) / mean
+
+    if scn.colagg is True:
+        assert st["column_aggregated"]
+    if scn.colagg is False:
+        assert not st["column_aggregated"]

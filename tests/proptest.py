@@ -1,0 +1,157 @@
+"""Minimal deterministic property-test harness (hypothesis stand-in).
+
+The container cannot pip-install ``hypothesis``, so this module provides
+the tiny subset the test-suite needs, with two deliberate differences:
+
+  * **Deterministic**: every example is drawn from a PRNG seeded by
+    ``(seed, example_index)``, so a failure is reproducible by rerunning
+    the test — no example database, no flaky shrink paths.
+  * **Shrinking-free**: on failure the harness re-raises the original
+    assertion annotated with the example index, the seed, and a repr of
+    the drawn arguments; matrices here are small enough to debug as-is.
+
+API sketch (mirrors ``hypothesis.strategies`` where it matters):
+
+    from proptest import forall, integers, floats, lists, sampled_from, composite
+
+    @composite
+    def my_pairs(draw):
+        n = draw(integers(1, 9))
+        return n, draw(lists(floats(-1, 1), min_size=n, max_size=n))
+
+    @forall(my_pairs(), sampled_from([4, 8]), examples=50)
+    def test_something(pair, block):
+        ...
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class Strategy:
+    """A deterministic value generator: ``sample(rng) -> value``."""
+
+    def __init__(self, sample_fn: Callable[[np.random.Generator], Any],
+                 label: str = "strategy"):
+        self._sample = sample_fn
+        self.label = label
+
+    def sample(self, rng: np.random.Generator) -> Any:
+        return self._sample(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._sample(rng)),
+                        label=f"{self.label}.map")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Strategy {self.label}>"
+
+
+# ---------------------------------------------------------------------------
+# primitive strategies
+# ---------------------------------------------------------------------------
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    """Inclusive integer range, like ``st.integers``."""
+    if min_value > max_value:
+        raise ValueError(f"empty range [{min_value}, {max_value}]")
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        label=f"integers({min_value},{max_value})",
+    )
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    """Uniform floats in [min_value, max_value] — never NaN/inf."""
+    return Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        label=f"floats({min_value},{max_value})",
+    )
+
+
+def sampled_from(options: Sequence[Any]) -> Strategy:
+    options = list(options)
+    if not options:
+        raise ValueError("sampled_from needs at least one option")
+    return Strategy(
+        lambda rng: options[int(rng.integers(len(options)))],
+        label=f"sampled_from({options!r})",
+    )
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    if not (0 <= min_size <= max_size):
+        raise ValueError(f"bad sizes [{min_size}, {max_size}]")
+
+    def sample(rng: np.random.Generator) -> list:
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(size)]
+
+    return Strategy(sample, label=f"lists({elements.label})")
+
+
+def composite(fn: Callable) -> Callable[..., Strategy]:
+    """Build a strategy from a function taking ``draw`` as first argument.
+
+    ``draw(strategy)`` pulls one value from the shared example PRNG, so a
+    composite's internal draws stay reproducible.
+    """
+
+    @functools.wraps(fn)
+    def make(*args: Any, **kwargs: Any) -> Strategy:
+        def sample(rng: np.random.Generator) -> Any:
+            return fn(lambda strategy: strategy.sample(rng), *args, **kwargs)
+
+        return Strategy(sample, label=f"composite({fn.__name__})")
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+
+def forall(*strategies: Strategy, examples: int = 25, seed: int = 0):
+    """Run the decorated test once per deterministic example.
+
+    Replaces ``@settings(max_examples=N) @given(...)``: each example ``i``
+    draws every positional strategy from ``default_rng((seed, i))`` and
+    calls the test with the drawn values. Failures re-raise with enough
+    context to reproduce (example index, seed, argument reprs).
+    """
+    if not strategies:
+        raise ValueError("forall needs at least one strategy")
+
+    def decorate(test_fn: Callable) -> Callable:
+        def run() -> None:
+            for i in range(examples):
+                rng = np.random.default_rng((seed, i))
+                drawn = [s.sample(rng) for s in strategies]
+                try:
+                    test_fn(*drawn)
+                except Exception as exc:
+                    arg_repr = ", ".join(_short_repr(d) for d in drawn)
+                    raise AssertionError(
+                        f"{test_fn.__name__} failed on example {i}/{examples}"
+                        f" (seed={seed}): args=({arg_repr})"
+                    ) from exc
+
+        # Copy identity but NOT __wrapped__: pytest reads the wrapped
+        # signature through it and would demand fixtures for the drawn
+        # parameters. The runner takes no pytest-visible arguments.
+        run.__name__ = test_fn.__name__
+        run.__qualname__ = getattr(test_fn, "__qualname__", test_fn.__name__)
+        run.__doc__ = test_fn.__doc__
+        run.__module__ = test_fn.__module__
+        return run
+
+    return decorate
+
+
+def _short_repr(value: Any, limit: int = 200) -> str:
+    r = repr(value)
+    return r if len(r) <= limit else r[: limit - 3] + "..."

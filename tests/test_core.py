@@ -1,4 +1,4 @@
-"""Core CB-SpMV pipeline: unit + hypothesis property tests.
+"""Core CB-SpMV pipeline: unit + property tests (proptest harness).
 
 Invariants under test (the paper's §3 claims as executable properties):
   * blocking partitions losslessly (CB round-trips to the dense matrix)
@@ -10,7 +10,7 @@ Invariants under test (the paper's §3 claims as executable properties):
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import composite, forall, floats, integers, lists, sampled_from
 
 from repro.core import (
     CBMatrix, FMT_COO, FMT_CSR, FMT_DENSE, FormatThresholds,
@@ -28,17 +28,14 @@ from repro.data import matrices
 # strategies
 # ---------------------------------------------------------------------------
 
-@st.composite
+@composite
 def coo_matrices(draw):
-    m = draw(st.integers(8, 120))
-    n = draw(st.integers(8, 120))
-    nnz = draw(st.integers(1, 200))
-    rows = draw(st.lists(st.integers(0, m - 1), min_size=nnz, max_size=nnz))
-    cols = draw(st.lists(st.integers(0, n - 1), min_size=nnz, max_size=nnz))
-    vals = draw(st.lists(
-        st.floats(-100, 100, allow_nan=False, width=32),
-        min_size=nnz, max_size=nnz,
-    ))
+    m = draw(integers(8, 120))
+    n = draw(integers(8, 120))
+    nnz = draw(integers(1, 200))
+    rows = draw(lists(integers(0, m - 1), min_size=nnz, max_size=nnz))
+    cols = draw(lists(integers(0, n - 1), min_size=nnz, max_size=nnz))
+    vals = draw(lists(floats(-100, 100), min_size=nnz, max_size=nnz))
     return (np.asarray(rows), np.asarray(cols),
             np.asarray(vals, np.float32), (m, n))
 
@@ -47,8 +44,7 @@ def coo_matrices(draw):
 # blocking
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=50, deadline=None)
-@given(coo_matrices(), st.sampled_from([4, 8, 16]))
+@forall(coo_matrices(), sampled_from([4, 8, 16]), examples=50)
 def test_partition_roundtrip(mat, B):
     rows, cols, vals, shape = mat
     part = partition_coo(rows, cols, vals, shape, B)
@@ -61,8 +57,7 @@ def test_partition_roundtrip(mat, B):
     np.testing.assert_allclose(rebuilt, dense, rtol=1e-5, atol=1e-5)
 
 
-@settings(max_examples=50, deadline=None)
-@given(coo_matrices(), st.sampled_from([8, 16]))
+@forall(coo_matrices(), sampled_from([8, 16]), examples=50)
 def test_partition_intra_block_row_major(mat, B):
     rows, cols, vals, shape = mat
     part = partition_coo(rows, cols, vals, shape, B)
@@ -76,8 +71,8 @@ def test_partition_intra_block_row_major(mat, B):
 # packed coordinates + VP aggregation
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=50, deadline=None)
-@given(st.sampled_from([4, 8, 16]), st.integers(1, 64), st.integers(0, 2**31))
+@forall(sampled_from([4, 8, 16]), integers(1, 64), integers(0, 2**31),
+        examples=50)
 def test_coord_pack_roundtrip(B, nnz, seed):
     rng = np.random.default_rng(seed)
     r = rng.integers(0, B, nnz).astype(np.int32)
@@ -133,8 +128,7 @@ def test_vp_alignment_and_disjointness():
 # column aggregation
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=40, deadline=None)
-@given(coo_matrices(), st.sampled_from([8, 16]))
+@forall(coo_matrices(), sampled_from([8, 16]), examples=40)
 def test_column_aggregation_preserves_matrix(mat, B):
     rows, cols, vals, shape = mat
     agg = column_aggregate(rows, cols, shape, B)
@@ -144,8 +138,7 @@ def test_column_aggregation_preserves_matrix(mat, B):
         assert agg.original_col(panel, int(agg.new_cols[i])) == cols[i]
 
 
-@settings(max_examples=40, deadline=None)
-@given(coo_matrices(), st.sampled_from([8, 16]))
+@forall(coo_matrices(), sampled_from([8, 16]), examples=40)
 def test_column_aggregation_compacts(mat, B):
     rows, cols, vals, shape = mat
     agg = column_aggregate(rows, cols, shape, B)
@@ -168,9 +161,8 @@ def test_format_thresholds_paper_values():
     assert list(fmt) == [FMT_COO, FMT_COO, FMT_CSR, FMT_CSR, FMT_DENSE, FMT_DENSE]
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.integers(1, 256), min_size=1, max_size=300),
-       st.sampled_from([4, 8]))
+@forall(lists(integers(1, 256), min_size=1, max_size=300),
+        sampled_from([4, 8]), examples=40)
 def test_tb_balance_invariants(nnzs, warps):
     nnz = np.asarray(nnzs)
     res = tb_load_balance(nnz, warps_per_tb=warps)

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -26,6 +28,7 @@ def _run(code: str, devices: int = 4) -> str:
 def test_distributed_spmv_4dev():
     _run("""
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
 from repro.core.cb_matrix import CBMatrix
 from repro.core import distributed as dist
 from repro.core.spmv_ref import dense_oracle
@@ -36,7 +39,7 @@ r, c, v = matrices.power_law(m, n, seed=7)
 cb = CBMatrix.from_coo(r, c, v, (m, n), block_size=16, val_dtype=np.float32)
 sh = dist.shard_streams(cb, 4)
 assert sh.load_imbalance < 1.2, sh.device_nnz
-mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((4,), ("model",))
 x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
 y0 = dense_oracle(r, c, v.astype(np.float32), (m, n), x)
 for impl in ("pallas", "reference"):
@@ -50,6 +53,7 @@ def test_sharded_train_step_matches_single_device():
     _run("""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import Model, axis_rules, logical_to_sharding
 from repro.models.sharding import sanitize_shardings
@@ -71,8 +75,7 @@ batch = {"tokens": toks, "targets": toks}
 s_plain, m_plain = jax.jit(step)(state, batch)
 
 # sharded: data x model mesh
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 with axis_rules(mesh):
     psh = sanitize_shardings(jax.eval_shape(lambda: params),
                              logical_to_sharding(axes, mesh), mesh)
@@ -98,15 +101,15 @@ def test_compressed_cross_pod_sum():
 import numpy as np, jax, jax.numpy as jnp
 from functools import partial
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.training.grad_compression import compressed_cross_pod_sum, init_ef_buffers
 
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 2), ("pod", "data"))
 g_local = {"w": jnp.arange(8.0).reshape(2, 4) / 7.0}
 ef = init_ef_buffers(g_local)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-         check_vma=False)
+@partial(compat.shard_map, mesh=mesh, in_specs=(P(), P()),
+         out_specs=(P(), P()), check_vma=False)
 def run(g, e):
     s, ne = compressed_cross_pod_sum(g, e, axis_name="pod")
     return s, ne
@@ -122,9 +125,10 @@ print("OK")
 def test_pipeline_two_stages():
     _run("""
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
 from repro.runtime.pipeline import pipeline_forward
 
-mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((2,), ("pod",))
 # stage s applies ws[s]: y = x @ w
 ws = jnp.stack([jnp.eye(8) * 2.0, jnp.eye(8) * 3.0])  # (S, 8, 8)
 

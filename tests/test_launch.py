@@ -125,13 +125,12 @@ def test_vocab_padding_values():
 
 
 def test_spec_for_under_rules():
-    import jax
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
     from repro.models.sharding import axis_rules, spec_for
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("model",))
     with axis_rules(mesh, {"mlp": "model"}):
         assert spec_for(("batch", "mlp")) == P(None, "model")
         assert spec_for((None, "embed")) == P(None, None)

@@ -6,6 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_smoke_config
@@ -14,6 +15,17 @@ from repro.models import Model
 from repro.runtime import HeartbeatMonitor, RestartPolicy
 from repro.serving import Request, ServingEngine
 from repro.training import OPTIMIZERS, TrainLoopConfig, TrainState, run_training
+
+pytestmark = pytest.mark.system
+
+
+def _loss_improved(hist, k=3):
+    """Robust learning signal: mean of the last k logged losses must beat
+    the mean of the first k. Single-step comparisons flap on per-batch
+    noise when only a handful of steps run."""
+    losses = [h["loss"] for h in hist]
+    assert len(losses) >= 2 * k, losses
+    return float(np.mean(losses[-k:])) < float(np.mean(losses[:k]))
 
 
 def test_train_crash_restart_serve_cycle():
@@ -27,12 +39,14 @@ def test_train_crash_restart_serve_cycle():
         mon = HeartbeatMonitor(num_hosts=1)
 
         # phase 1: train to step 8, checkpoint at 4 and 8 — then "crash"
+        # (warmup_steps=2 so the LR actually reaches peak inside the run)
         state, hist = run_training(
             model, stream,
-            TrainLoopConfig(total_steps=8, checkpoint_every=4, log_every=2),
+            TrainLoopConfig(total_steps=8, checkpoint_every=4, log_every=1,
+                            warmup_steps=2),
             checkpointer=ck, monitor=mon,
         )
-        assert hist[-1]["loss"] < hist[0]["loss"]
+        assert _loss_improved(hist)
 
         # phase 2: restart decision + restore + replay
         decision = RestartPolicy(ck, mon).on_failure()
@@ -43,7 +57,8 @@ def test_train_crash_restart_serve_cycle():
                               step=decision.restore_step)
         restored = jax.tree_util.tree_map(jnp.asarray, restored)
         state2, hist2 = run_training(
-            model, stream, TrainLoopConfig(total_steps=12, log_every=2),
+            model, stream,
+            TrainLoopConfig(total_steps=12, log_every=2, warmup_steps=2),
             initial_state=restored,
         )
         assert int(state2.step) == 12
@@ -65,9 +80,10 @@ def test_cb_sparse_model_trains():
         DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
     )
     state, hist = run_training(
-        model, stream, TrainLoopConfig(total_steps=6, log_every=1)
+        model, stream,
+        TrainLoopConfig(total_steps=6, log_every=1, warmup_steps=2),
     )
-    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert _loss_improved(hist)
     # sparsity metadata static: tile count unchanged by training
     spec = model.specs["gate"]
     assert state.params["layers"]["ffn"]["gate"]["tiles"].shape[1] == spec.num_tiles

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import floats, forall, lists
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig
@@ -78,9 +78,7 @@ def test_warmup_cosine_shape():
 # int8 EF compression
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
-                min_size=1, max_size=64))
+@forall(lists(floats(-1e3, 1e3), min_size=1, max_size=64), examples=30)
 def test_quantize_bounded_error(vals):
     x = jnp.asarray(vals, jnp.float32)
     q, s = quantize_int8(x)
@@ -115,21 +113,28 @@ def test_loss_decreases_and_resume_is_exact():
     )
     with tempfile.TemporaryDirectory() as d:
         ck = Checkpointer(d, async_write=False)
+        # warmup_steps=2 so the LR reaches peak inside the short run; the
+        # learning signal is mean-of-last-k vs first-k (single-step
+        # comparisons flap on per-batch noise).
         state, hist = run_training(
             model, stream,
-            TrainLoopConfig(total_steps=10, checkpoint_every=5, log_every=2),
+            TrainLoopConfig(total_steps=10, checkpoint_every=5, log_every=1,
+                            warmup_steps=2),
             checkpointer=ck,
         )
-        assert hist[-1]["loss"] < hist[0]["loss"]
+        losses = [h["loss"] for h in hist]
+        assert np.mean(losses[-3:]) < np.mean(losses[:3])
 
         # restore at step 5 and re-run 5..10 -> identical final params
+        # (the resumed run must use the same schedule)
         opt = OPTIMIZERS["adamw"]()
         params, _ = model.init(jax.random.PRNGKey(0))
         example = TrainState.create(params, opt)
         mid = ck.restore(example, step=5)
         mid = jax.tree_util.tree_map(jnp.asarray, mid)
         state2, _ = run_training(
-            model, stream, TrainLoopConfig(total_steps=10, log_every=2),
+            model, stream,
+            TrainLoopConfig(total_steps=10, log_every=2, warmup_steps=2),
             initial_state=mid,
         )
         for a, b in zip(jax.tree_util.tree_leaves(state.params),
