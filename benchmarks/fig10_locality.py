@@ -45,8 +45,8 @@ def run(scale="small") -> list[dict]:
     return out
 
 
-def main():
-    rows = run()
+def main(scale="small"):
+    rows = run(scale)
     print("matrix,l1miss/nnz_cb,tile,bsr,csr,l2miss/nnz_cb,tile,bsr,csr")
     for r in rows:
         print(f"{r['matrix']},{r['m1_cb']:.3f},{r['m1_tile']:.3f},"

@@ -84,8 +84,8 @@ def run(scale="small") -> list[dict]:
     return out
 
 
-def main():
-    rows = run()
+def main(scale="small"):
+    rows = run(scale)
     print("matrix,nnz,t_I_us,t_II_us,speedup_II/I,work_I,work_II,"
           "tb_std_naive,tb_std_balanced")
     for r in rows:

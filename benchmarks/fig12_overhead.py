@@ -47,8 +47,8 @@ def run(scale="small") -> list[dict]:
     return out
 
 
-def main():
-    rows = run()
+def main(scale="small"):
+    rows = run(scale)
     print("matrix,nnz,cb_bytes/csr,cb_bytes/bsr,pre_cb_ms,pre_csr_ms,pre_bsr_ms")
     for r in rows:
         print(f"{r['matrix']},{r['nnz']},"

@@ -29,8 +29,8 @@ def run(scale="small") -> dict:
             "super_sparse_fraction": float(np.mean(frac)), "stds": stds}
 
 
-def main():
-    res = run()
+def main(scale="small"):
+    res = run(scale)
     total = res["hist8"].sum()
     print("fig3a: block-nnz histogram (ranges of 32, share of blocks)")
     for i, h in enumerate(res["hist8"]):

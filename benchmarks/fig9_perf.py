@@ -98,8 +98,8 @@ def run(scale="small") -> list[dict]:
     return rows_out
 
 
-def main():
-    rows = run()
+def main(scale="small"):
+    rows = run(scale)
     print("matrix,nnz,cb_gflops,speed_vs_csr,speed_vs_coo,speed_vs_bsr,"
           "bytes_cb_over_csr,bytes_cb_over_bsr")
     geo = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))

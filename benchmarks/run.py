@@ -1,23 +1,48 @@
 """Benchmark driver: one section per paper figure/table.
 
     PYTHONPATH=src python -m benchmarks.run [--scale small|bench]
+                                            [--only fig9,spmv_batch,...]
+                                            [--json BENCH_spmv.json]
+
+``--json`` writes every executed section's row dicts (timings, bytes,
+padded-work ratios) to one machine-readable file so the perf trajectory
+is tracked across PRs; ``scripts/bench_guard.py`` diffs such a file
+against the checked-in ``benchmarks/BENCH_spmv.json`` baseline.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _jsonable(obj):
+    """Coerce numpy scalars/arrays so ``json.dump`` accepts section rows."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
     ap.add_argument("--only", default=None,
-                    help="comma list: fig9,fig10,fig11,fig12,fig34")
+                    help="comma list: fig9,fig10,fig11,fig12,fig34,spmv_batch")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write executed sections' rows to PATH as JSON")
     args = ap.parse_args()
 
     from . import fig9_perf, fig10_locality, fig11_ablation, fig12_overhead
-    from . import fig34_distribution
+    from . import fig34_distribution, spmv_batch
 
     sections = {
         "fig9": ("Fig. 9 — SpMV perf vs CSR/COO/BSR", fig9_perf.main),
@@ -25,14 +50,28 @@ def main() -> None:
         "fig11": ("Fig. 11 — ablation CB-I/II/III", fig11_ablation.main),
         "fig12": ("Fig. 12 — storage + preprocessing", fig12_overhead.main),
         "fig34": ("Fig. 3/4 — distribution + balance", fig34_distribution.main),
+        "spmv_batch": ("Batched super-block engine vs unbatched",
+                       spmv_batch.main),
     }
     chosen = args.only.split(",") if args.only else list(sections)
+    results: dict[str, object] = {}
     for key in chosen:
         title, fn = sections[key]
         print(f"\n===== {title} =====", flush=True)
         t0 = time.time()
-        fn()
+        rows = fn(args.scale)
+        results[key] = _jsonable(rows)
         print(f"[{key} done in {time.time() - t0:.1f}s]", flush=True)
+
+    if args.json:
+        payload = {
+            "schema": "cb-spmv-bench/v1",
+            "scale": args.scale,
+            "sections": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"[wrote {args.json}]", flush=True)
 
 
 if __name__ == "__main__":

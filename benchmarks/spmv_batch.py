@@ -1,0 +1,113 @@
+"""Batched super-block engine: padded-work + wall-time vs the unbatched path.
+
+The batching PR's two measurable claims, per corpus matrix:
+
+  * **padded-FLOP ratio** — elements the kernels actually stream divided
+    by real nnz. The one-block-per-step stream pads every panel/COO row
+    to the *global* max width; the super-block packer pads each block to
+    its own width bucket and lane-packs groups, so one wide outlier no
+    longer taxes the whole stream. Pure preprocessing arithmetic —
+    deterministic, hardware-independent.
+  * **per-call wall time of the kernel path** (``t_unbatched`` /
+    ``t_batched``) — the Pallas engine end-to-end (interpret mode off
+    TPU), where per-grid-step overhead is real and batching is designed
+    to amortize it: G blocks per step means 1/G as many step dispatches
+    and one fused combine. This is the guarded metric.
+
+``t_ref_*`` columns record the same layouts through the pure-XLA
+reference lowering (the CPU production fallback) for context: the flat
+reference stays the default CPU path precisely because slot-granular
+combines don't pay off under XLA's scalar scatter; compiled-TPU numbers
+are a ROADMAP item.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CBMatrix
+from repro.core.streams import build_streams, build_super_streams
+from repro.data import matrices
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=15):
+    """Min of individually-timed calls: robust to scheduler noise at the
+    microsecond scales these small matrices produce on a shared box."""
+    fn(*args).block_until_ready()
+    fn(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(scale="small", group_size=None) -> list[dict]:
+    rows_out = []
+    kernel = jax.jit(lambda s, x: ops.cb_spmv(s, x, impl="pallas"))
+    reference = jax.jit(lambda s, x: ops.cb_spmv(s, x, impl="reference"))
+    for spec, r, c, v, shape in matrices.corpus(scale):
+        v32 = v.astype(np.float32)
+        cb = CBMatrix.from_coo(r, c, v32, shape, block_size=16,
+                               val_dtype=np.float32)
+        flat = build_streams(cb)
+        packed = build_super_streams(cb, group_size=group_size)
+        flat_d, packed_d = flat.device_put(), packed.device_put()
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal(shape[1]), jnp.float32
+        )
+
+        uw, sw = flat.padded_work(), packed.padded_work()
+        nnz = max(1, cb.nnz)
+        rows_out.append({
+            "matrix": spec.name,
+            "nnz": int(cb.nnz),
+            "group_size": int(packed.group_size),
+            "steps_unbatched": int(
+                flat.num_dense + flat.num_panel + flat.num_coo
+            ),
+            "steps_batched": int(
+                packed.num_dense_groups + packed.num_panel_groups
+                + packed.num_coo_groups
+            ),
+            "padded_elems_unbatched": int(sum(uw.values())),
+            "padded_elems_batched": int(sum(sw.values())),
+            "padded_ratio_unbatched": sum(uw.values()) / nnz,
+            "padded_ratio_batched": sum(sw.values()) / nnz,
+            "t_unbatched": _time(kernel, flat_d, x),
+            "t_batched": _time(kernel, packed_d, x),
+            "t_ref_unbatched": _time(reference, flat_d, x),
+            "t_ref_batched": _time(reference, packed_d, x),
+        })
+    return rows_out
+
+
+def main(scale="small"):
+    rows = run(scale)
+    print("matrix,nnz,G,steps_un,steps_b,padded_ratio_un,padded_ratio_b,"
+          "t_un_ms,t_b_ms,t_ref_un_us,t_ref_b_us")
+    for r in rows:
+        print(f"{r['matrix']},{r['nnz']},{r['group_size']},"
+              f"{r['steps_unbatched']},{r['steps_batched']},"
+              f"{r['padded_ratio_unbatched']:.2f},"
+              f"{r['padded_ratio_batched']:.2f},"
+              f"{r['t_unbatched'] * 1e3:.2f},{r['t_batched'] * 1e3:.2f},"
+              f"{r['t_ref_unbatched'] * 1e6:.0f},"
+              f"{r['t_ref_batched'] * 1e6:.0f}")
+    geo = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+    print(f"GEOMEAN kernel-path speedup (un/b): "
+          f"{geo([r['t_unbatched'] / r['t_batched'] for r in rows]):.2f}x; "
+          f"step shrink: "
+          f"{geo([r['steps_unbatched'] / max(1, r['steps_batched']) for r in rows]):.2f}x; "
+          f"padded-work shrink: "
+          f"{geo([r['padded_elems_unbatched'] / max(1, r['padded_elems_batched']) for r in rows]):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

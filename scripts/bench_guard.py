@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Coarse benchmark regression gate for ``benchmarks/run.py --json`` output.
+
+    python scripts/bench_guard.py NEW.json [BASELINE.json]
+
+Two checks, both cheap enough for every CI run:
+
+  * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output and
+    every ``spmv_batch`` row carries its required, finite metrics;
+  * **regression** — deterministic metrics (``padded_*``, ``steps_*``)
+    are compared row by row against the baseline (a 2x jump is always a
+    genuine packing bug). Timings are guarded as the **batched /
+    unbatched ratio**, geomean'd across matched rows, compared against
+    the same ratio in the baseline — machine speed cancels out, so the
+    checked-in baseline stays valid on any box; a 2x relative drift
+    means batching itself got slower, not the machine. Absolute wall
+    times are never compared across machines. (Real perf gating needs
+    TPU hardware — see ROADMAP.)
+
+Exit status: 0 clean, 1 on any violation (messages on stderr).
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+REQUIRED_SPMV_BATCH_KEYS = (
+    "matrix", "nnz", "group_size", "steps_unbatched", "steps_batched",
+    "padded_elems_unbatched", "padded_elems_batched",
+    "padded_ratio_unbatched", "padded_ratio_batched",
+    "t_unbatched", "t_batched",
+)
+ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_")
+# (numerator, denominator): the machine-independent relative timing signals
+TIMING_PAIRS = (
+    ("t_batched", "t_unbatched"),
+    ("t_ref_batched", "t_ref_unbatched"),
+)
+MAX_RATIO = 2.0
+
+
+def fail(msg: str) -> None:
+    print(f"bench_guard: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {path}: {e}")
+    if not isinstance(data, dict) or data.get("schema") != "cb-spmv-bench/v1":
+        fail(f"{path}: not cb-spmv-bench/v1 output")
+    if not isinstance(data.get("sections"), dict) or not data["sections"]:
+        fail(f"{path}: missing or empty 'sections'")
+    return data
+
+
+def check_schema(data: dict, path: str) -> None:
+    rows = data["sections"].get("spmv_batch")
+    if rows is None:
+        return
+    if not isinstance(rows, list) or not rows:
+        fail(f"{path}: spmv_batch section is empty")
+    for i, row in enumerate(rows):
+        for key in REQUIRED_SPMV_BATCH_KEYS:
+            if key not in row:
+                fail(f"{path}: spmv_batch[{i}] missing '{key}'")
+            val = row[key]
+            if isinstance(val, (int, float)) and not math.isfinite(val):
+                fail(f"{path}: spmv_batch[{i}]['{key}'] is not finite")
+
+
+def index_rows(rows) -> dict:
+    if not isinstance(rows, list):
+        return {}
+    return {r["matrix"]: r for r in rows
+            if isinstance(r, dict) and "matrix" in r}
+
+
+def check_regressions(new: dict, base: dict) -> list[str]:
+    problems = []
+    for section, base_rows in base["sections"].items():
+        new_rows = new["sections"].get(section)
+        if new_rows is None:
+            continue  # section not executed this run — nothing to compare
+        base_idx = index_rows(base_rows)
+        rel_drift: dict[str, list[float]] = {}
+        for name, new_row in index_rows(new_rows).items():
+            base_row = base_idx.get(name)
+            if base_row is None:
+                continue
+            for key, new_val in new_row.items():
+                old_val = base_row.get(key)
+                if (not isinstance(old_val, (int, float)) or old_val <= 0
+                        or not isinstance(new_val, (int, float))):
+                    continue
+                if key.startswith(ROW_GUARDED_PREFIXES):
+                    if new_val > MAX_RATIO * old_val:
+                        problems.append(
+                            f"{section}/{name}/{key}: {new_val:.4g} > "
+                            f"{MAX_RATIO}x baseline {old_val:.4g}")
+            for num, den in TIMING_PAIRS:
+                vals = [r.get(k) for r in (new_row, base_row)
+                        for k in (num, den)]
+                if not all(isinstance(v, (int, float)) and v > 0
+                           for v in vals):
+                    continue
+                new_rel = new_row[num] / new_row[den]
+                base_rel = base_row[num] / base_row[den]
+                rel_drift.setdefault(f"{num}/{den}", []).append(
+                    new_rel / base_rel)
+        for pair, drifts in rel_drift.items():
+            geo = math.exp(sum(math.log(d) for d in drifts) / len(drifts))
+            if geo > MAX_RATIO:
+                problems.append(
+                    f"{section}/{pair}: relative timing drifted "
+                    f"{geo:.2f}x > {MAX_RATIO}x vs baseline across "
+                    f"{len(drifts)} rows")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) not in (2, 3):
+        print(__doc__, file=sys.stderr)
+        return 1
+    new = load(argv[1])
+    check_schema(new, argv[1])
+    if len(argv) == 3:
+        base = load(argv[2])
+        check_schema(base, argv[2])
+        problems = check_regressions(new, base)
+        if problems:
+            for p in problems:
+                print(f"bench_guard: REGRESSION {p}", file=sys.stderr)
+            return 1
+    print("bench_guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -76,6 +76,25 @@ def tb_load_balance(nnz_per_blk: np.ndarray, warps_per_tb: int = 8) -> BalanceRe
     return _heap_assign(nnz_per_blk, num_tb, warps_per_tb)
 
 
+def grid_group_balance(load_per_blk: np.ndarray, group_size: int) -> BalanceResult:
+    """Alg. 2 at *grid-step* granularity (the batched execution engine).
+
+    A "group" is the set of sub-blocks one Pallas grid step executes (the
+    TPU analogue of the paper's thread block). Each group holds at most
+    ``group_size`` blocks; the heap hands the heaviest remaining block to
+    the lightest group, so the per-step loads come out near-equal.
+
+    ``load_per_blk`` is whatever each block costs the step: nnz for dense
+    tiles (uniform-shape groups, cache balance), or the *padded payload
+    width* for panel/COO groups — there the array width every step DMAs is
+    ``max_g sum(widths in g)``, so equalizing summed width across groups
+    directly minimizes the padding the widest group forces on the rest.
+    """
+    nblk = len(load_per_blk)
+    num_groups = max(1, -(-nblk // group_size))
+    return _heap_assign(load_per_blk, num_groups, group_size)
+
+
 def device_load_balance(nnz_per_blk: np.ndarray, num_devices: int) -> BalanceResult:
     """Equal block count + near-equal nnz per device (uniform shard shapes)."""
     nblk = len(nnz_per_blk)

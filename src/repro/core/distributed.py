@@ -86,7 +86,6 @@ def shard_streams(cb: CBMatrix, num_devices: int) -> ShardedStreams:
             colagg_applied=s.colagg_applied,
             dense_tiles=_pad_axis0(np.asarray(s.dense_tiles), nd),
             dense_brow=_pad_axis0(np.asarray(s.dense_brow), nd),
-            dense_bcol=_pad_axis0(np.asarray(s.dense_bcol), nd),
             dense_xidx=_pad_axis0(np.asarray(s.dense_xidx), nd),
             panel_vals=_pad_axis0(_pad_axis_last(np.asarray(s.panel_vals), Kp), np_),
             panel_brow=_pad_axis0(np.asarray(s.panel_brow), np_),

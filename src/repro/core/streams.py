@@ -23,6 +23,18 @@ encode the column-aggregation ``restore_cols`` mapping (or the trivial
 ``bcol*B + j`` mapping), so kernels never consult the restore maps at run
 time — matching Alg. 3's precomputed ``cols_offset``/``restore_cols``
 lookups but resolved at preprocessing time where they are free.
+
+Two stream granularities share this layout:
+
+  * ``SpMVStreams``       — one block per stream row (one per grid step).
+  * ``SuperBlockStreams`` — ``build_super_streams``: up to ``group_size``
+    blocks per stream row. Dense tiles stack vertically into a
+    (G*B, B) super-tile; panel/COO payloads are width-*bucketed* (each
+    block's width rounded to a sublane multiple) and lane-packed side by
+    side, with a per-lane segment map telling the kernel which block slot
+    each lane belongs to. The Alg. 2 balancer assigns blocks to groups so
+    every grid step carries near-equal payload — the paper's inter-block
+    load balancing applied at grid-step granularity.
 """
 from __future__ import annotations
 
@@ -31,14 +43,58 @@ import dataclasses
 import jax
 import numpy as np
 
+from . import balance as balance_mod
 from . import column_agg as column_agg_mod
 from .aggregation import coord_bits
 from .cb_matrix import CBMatrix
 from .formats import FMT_COO, FMT_CSR, FMT_DENSE
 
+# ---------------------------------------------------------------------------
+# Padding policy — the single place payload widths get aligned.
+# ---------------------------------------------------------------------------
 
-def _round_up(v: int, mult: int) -> int:
-    return max(mult, -(-v // mult) * mult)
+SUBLANE = 8  # float32 sublane count; payload widths align to this for DMA
+
+
+def pad_width(width: int, mult: int = SUBLANE) -> int:
+    """Round a payload width up to the DMA-friendly multiple.
+
+    Zero stays zero: an empty stream allocates genuinely empty arrays
+    (the dispatch layer skips the format entirely), instead of the old
+    behaviour of silently materializing a phantom ``(0, B, 8)`` buffer.
+    """
+    return -(-int(width) // mult) * mult
+
+
+# Aim each grid step's payload at about this many elements: big enough to
+# amortize per-step DMA/launch overhead, small enough that many steps
+# remain for the megacore "parallel" partitioning and the per-step one-hot
+# scratch stays comfortably inside VMEM.
+TARGET_STEP_ELEMS = 4096
+
+# Upper bound on blocks per grid step: caps the unrolled dense loop and
+# the (W, G*B) segment one-hot width in the batched kernels.
+MAX_GROUP_SIZE = 16
+
+
+def auto_group_size(block_size: int) -> int:
+    """Occupancy heuristic: blocks per grid step for a given block size."""
+    g = TARGET_STEP_ELEMS // (block_size * block_size)
+    return int(min(max(g, 1), MAX_GROUP_SIZE))
+
+
+def even_group(count: int, group_size: int) -> tuple[int, int]:
+    """(num_groups, slots per group) for ``count`` blocks at target G.
+
+    Slots are evened across the ``ceil(count / G)`` groups so the last
+    group is never mostly empty padding (count=40, G=16 -> 3 groups of
+    14, not two full ones plus a third at 8/16). Shared by the host-side
+    packer and the jit-side regroup so both agree on group geometry.
+    """
+    if count == 0:
+        return 0, group_size
+    ng = -(-count // group_size)
+    return ng, -(-count // ng)
 
 
 @dataclasses.dataclass
@@ -61,7 +117,6 @@ class SpMVStreams:
     # -- dense tile stream ----------------------------------------------
     dense_tiles: jax.Array   # (nd, B, B) val
     dense_brow: jax.Array    # (nd,) int32
-    dense_bcol: jax.Array    # (nd,) int32 (compacted-space block col)
     dense_xidx: jax.Array    # (nd, B) int32 global x index per tile column
     # -- panel stream (CSR blocks, column-compacted) ---------------------
     panel_vals: jax.Array    # (np_, B, Kp) val
@@ -88,11 +143,20 @@ class SpMVStreams:
     def device_put(self) -> "SpMVStreams":
         return jax.tree_util.tree_map(jax.numpy.asarray, self)
 
+    def padded_work(self) -> dict:
+        """Elements each kernel actually streams, padding included."""
+        B = self.block_size
+        return {
+            "dense": int(self.num_dense * B * B),
+            "panel": int(self.num_panel * B * self.panel_vals.shape[-1]),
+            "coo": int(self.num_coo * self.coo_codes.shape[-1]),
+        }
+
 
 jax.tree_util.register_dataclass(
     SpMVStreams,
     data_fields=[
-        "dense_tiles", "dense_brow", "dense_bcol", "dense_xidx",
+        "dense_tiles", "dense_brow", "dense_xidx",
         "panel_vals", "panel_brow", "panel_xidx",
         "coo_codes", "coo_vals", "coo_brow", "coo_xidx",
     ],
@@ -105,6 +169,38 @@ def _block_x_indices(cb: CBMatrix, brow: int, bcol: int) -> np.ndarray:
     return column_agg_mod.restore_for_block(
         cb.colagg, brow, bcol, cb.block_size, cb.shape[1]
     ).astype(np.int32)
+
+
+def _collect_blocks(cb: CBMatrix):
+    """Walk the CBMatrix once, typing each block's payload for its stream.
+
+    Returns ``(dense, panels, coos)`` where
+      dense  — (brow, (B, B) tile, (B,) xidx, nnz) per FMT_DENSE block,
+      panels — (brow, (B, k) compacted panel, (k,) xidx) per FMT_CSR,
+      coos   — (brow, (e,) codes, (e,) vals, (e,) xidx) per FMT_COO.
+    """
+    B = cb.block_size
+    bits = coord_bits(B)
+    vdt = cb.val_dtype
+    dense, panels, coos = [], [], []
+    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
+        if fmt == FMT_DENSE:
+            tile = np.zeros((B, B), dtype=vdt)
+            tile[r, c] = v
+            dense.append((brow, tile, _block_x_indices(cb, brow, bcol), len(v)))
+        elif fmt == FMT_CSR:
+            ucols, rank = np.unique(c, return_inverse=True)
+            panel = np.zeros((B, len(ucols)), dtype=vdt)
+            panel[r, rank] = v
+            xidx = cb.global_x_index(brow, bcol, ucols).astype(np.int32)
+            panels.append((brow, panel, xidx))
+        elif fmt == FMT_COO:
+            codes = (c.astype(np.int64) << bits) | r.astype(np.int64)
+            xidx = cb.global_x_index(brow, bcol, c).astype(np.int32)
+            coos.append((brow, codes.astype(np.int32), v.astype(vdt), xidx))
+        else:  # pragma: no cover - format codes are exhaustive
+            raise ValueError(f"unknown format {fmt}")
+    return dense, panels, coos
 
 
 def build_streams(cb: CBMatrix) -> SpMVStreams:
@@ -121,41 +217,19 @@ def build_streams(cb: CBMatrix) -> SpMVStreams:
     mb = -(-m // B)
     vdt = cb.val_dtype
 
-    dense_tiles, dense_brow, dense_bcol, dense_xidx = [], [], [], []
-    panels: list[tuple[int, np.ndarray, np.ndarray]] = []  # (brow, panel, xidx)
-    coos: list[tuple[int, np.ndarray, np.ndarray, np.ndarray]] = []
-
-    for brow, bcol, fmt, r, c, v in cb.iter_blocks():
-        if fmt == FMT_DENSE:
-            tile = np.zeros((B, B), dtype=vdt)
-            tile[r, c] = v
-            dense_tiles.append(tile)
-            dense_brow.append(brow)
-            dense_bcol.append(bcol)
-            dense_xidx.append(_block_x_indices(cb, brow, bcol))
-        elif fmt == FMT_CSR:
-            ucols, rank = np.unique(c, return_inverse=True)
-            panel = np.zeros((B, len(ucols)), dtype=vdt)
-            panel[r, rank] = v
-            xidx = cb.global_x_index(brow, bcol, ucols).astype(np.int32)
-            panels.append((brow, panel, xidx))
-        elif fmt == FMT_COO:
-            codes = (c.astype(np.int64) << bits) | r.astype(np.int64)
-            xidx = cb.global_x_index(brow, bcol, c).astype(np.int32)
-            coos.append((brow, codes.astype(np.int32), v.astype(vdt), xidx))
-        else:  # pragma: no cover - format codes are exhaustive
-            raise ValueError(f"unknown format {fmt}")
+    dense, panels, coos = _collect_blocks(cb)
 
     # ---- dense stream ---------------------------------------------------
-    nd = len(dense_tiles)
-    d_tiles = np.stack(dense_tiles) if nd else np.zeros((0, B, B), vdt)
-    d_brow = np.asarray(dense_brow, np.int32)
-    d_bcol = np.asarray(dense_bcol, np.int32)
-    d_xidx = np.stack(dense_xidx).astype(np.int32) if nd else np.zeros((0, B), np.int32)
+    nd = len(dense)
+    d_tiles = (np.stack([t for _, t, _, _ in dense]) if nd
+               else np.zeros((0, B, B), vdt))
+    d_brow = np.asarray([b for b, _, _, _ in dense], np.int32)
+    d_xidx = (np.stack([x for _, _, x, _ in dense]).astype(np.int32) if nd
+              else np.zeros((0, B), np.int32))
 
     # ---- panel stream ---------------------------------------------------
     np_ = len(panels)
-    Kp = _round_up(max((p.shape[1] for _, p, _ in panels), default=1), 8)
+    Kp = pad_width(max((p.shape[1] for _, p, _ in panels), default=0))
     p_vals = np.zeros((np_, B, Kp), vdt)
     p_brow = np.zeros(np_, np.int32)
     p_xidx = np.zeros((np_, Kp), np.int32)
@@ -167,7 +241,7 @@ def build_streams(cb: CBMatrix) -> SpMVStreams:
 
     # ---- coo stream -----------------------------------------------------
     nc = len(coos)
-    Ep = _round_up(max((len(v) for _, _, v, _ in coos), default=1), 8)
+    Ep = pad_width(max((len(v) for _, _, v, _ in coos), default=0))
     c_codes = np.zeros((nc, Ep), np.int32)
     c_vals = np.zeros((nc, Ep), vdt)
     c_brow = np.zeros(nc, np.int32)
@@ -181,8 +255,228 @@ def build_streams(cb: CBMatrix) -> SpMVStreams:
 
     return SpMVStreams(
         block_size=B, m=m, n=n, mb=mb, colagg_applied=cb.colagg.applied,
-        dense_tiles=d_tiles, dense_brow=d_brow, dense_bcol=d_bcol,
-        dense_xidx=d_xidx,
+        dense_tiles=d_tiles, dense_brow=d_brow, dense_xidx=d_xidx,
+        panel_vals=p_vals, panel_brow=p_brow, panel_xidx=p_xidx,
+        coo_codes=c_codes, coo_vals=c_vals, coo_brow=c_brow, coo_xidx=c_xidx,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Super-block streams: the batched execution engine's input format.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuperBlockStreams:
+    """Typed streams with many blocks fused per stream row.
+
+    One stream row = one Pallas grid step. Layouts per format:
+
+      * dense — tiles stacked vertically: slot ``g`` of a group owns
+        sublanes ``[g*B, (g+1)*B)`` of the ``(Gd*B, B)`` super-tile; its
+        partial lands in row ``g`` of the ``(Gd, B)`` output tile.
+      * panel / coo — payloads lane-packed side by side at
+        sublane-aligned offsets (each block's width rounded up to
+        ``SUBLANE`` — its width *bucket*), so a wide outlier pads only
+        its own group. Lane->slot routing is **implicit**: slot =
+        ``lane // SUBLANE``. A block wider than one slot occupies
+        ``width / SUBLANE`` consecutive slots, each carrying the block's
+        row in ``*_brow``; the pieces' partials are reunited by the
+        additive scatter combine, which is exactly why no explicit
+        segment map is needed — and why the kernels can split a fused
+        payload with a plain reshape-sum instead of a data-dependent
+        segment contraction (O(payload) on every backend).
+
+    Slots that the packer left empty have zero payload and ``brow`` 0:
+    they scatter-add zeros into block-row 0, which is exact.
+    """
+
+    # -- static ---------------------------------------------------------
+    block_size: int
+    m: int
+    n: int
+    mb: int
+    colagg_applied: bool
+    group_size: int          # requested blocks per step (packer target)
+    # -- dense super-tiles ----------------------------------------------
+    dense_tiles: jax.Array   # (gd, Gd*B, B) val
+    dense_brow: jax.Array    # (gd, Gd) int32
+    dense_xidx: jax.Array    # (gd, Gd, B) int32
+    # -- lane-packed panel groups (Sp = Wp // SUBLANE slots) -------------
+    panel_vals: jax.Array    # (gp, B, Wp) val
+    panel_brow: jax.Array    # (gp, Sp) int32 slot -> block row
+    panel_xidx: jax.Array    # (gp, Wp) int32
+    # -- lane-packed coo groups (Sc = Wc // SUBLANE slots) ---------------
+    coo_codes: jax.Array     # (gc, Wc) int32 packed (col << bits | row)
+    coo_vals: jax.Array      # (gc, Wc) val (0 on padding)
+    coo_brow: jax.Array      # (gc, Sc) int32
+    coo_xidx: jax.Array      # (gc, Wc) int32
+
+    @property
+    def num_dense_groups(self) -> int:
+        return self.dense_tiles.shape[0]
+
+    @property
+    def num_panel_groups(self) -> int:
+        return self.panel_vals.shape[0]
+
+    @property
+    def num_coo_groups(self) -> int:
+        return self.coo_codes.shape[0]
+
+    def device_put(self) -> "SuperBlockStreams":
+        return jax.tree_util.tree_map(jax.numpy.asarray, self)
+
+    def padded_work(self) -> dict:
+        """Elements each kernel streams per full pass, padding included."""
+        return {
+            "dense": int(np.prod(self.dense_tiles.shape)),
+            "panel": int(np.prod(self.panel_vals.shape)),
+            "coo": int(np.prod(self.coo_codes.shape)),
+        }
+
+
+jax.tree_util.register_dataclass(
+    SuperBlockStreams,
+    data_fields=[
+        "dense_tiles", "dense_brow", "dense_xidx",
+        "panel_vals", "panel_brow", "panel_xidx",
+        "coo_codes", "coo_vals", "coo_brow", "coo_xidx",
+    ],
+    meta_fields=["block_size", "m", "n", "mb", "colagg_applied", "group_size"],
+)
+
+
+def build_super_streams(
+    cb: CBMatrix, group_size: int | None = None
+) -> SuperBlockStreams:
+    """Pack CB blocks into balanced super-block groups (host-side).
+
+    ``group_size=None`` picks ``auto_group_size(B)`` — the occupancy
+    heuristic targeting ~``TARGET_STEP_ELEMS`` payload elements per grid
+    step. Group assignment reuses the paper's Alg. 2 heap balancer
+    (``balance.grid_group_balance``): dense groups balance nnz across
+    uniform-shape super-tiles; panel/COO groups balance *bucketed width*
+    so the shared array width ``W = max_g sum(widths)`` — the padded
+    payload every step DMAs — is as small and as equal as the block mix
+    allows.
+    """
+    B = cb.block_size
+    m, n = cb.shape
+    mb = -(-m // B)
+    vdt = cb.val_dtype
+    G = auto_group_size(B) if group_size is None else int(group_size)
+    if G < 1:
+        raise ValueError(f"group_size must be >= 1, got {G}")
+
+    dense, panels, coos = _collect_blocks(cb)
+
+    # ---- dense: nnz-balanced tiles, evened slots per super-tile ---------
+    nd = len(dense)
+    if nd:
+        _, Gd = even_group(nd, G)
+        bal = balance_mod.grid_group_balance(
+            np.asarray([e[3] for e in dense], np.int64), Gd
+        )
+        gd = bal.num_groups
+        d_tiles = np.zeros((gd, Gd * B, B), vdt)
+        d_brow = np.zeros((gd, Gd), np.int32)
+        d_xidx = np.zeros((gd, Gd, B), np.int32)
+        for s, blk in enumerate(bal.slots):
+            if blk < 0:
+                continue
+            g, slot = divmod(s, Gd)
+            brow, tile, xidx, _ = dense[blk]
+            d_tiles[g, slot * B : (slot + 1) * B, :] = tile
+            d_brow[g, slot] = brow
+            d_xidx[g, slot] = xidx
+    else:
+        d_tiles = np.zeros((0, G * B, B), vdt)
+        d_brow = np.zeros((0, G), np.int32)
+        d_xidx = np.zeros((0, G, B), np.int32)
+
+    # ---- panel / coo: lane-packed, width-balanced -----------------------
+    def _pack_lanes(widths, payload_rows):
+        """Assign blocks to groups by bucketed width and lay out lanes.
+
+        ``widths[i]`` is block i's bucketed lane count (a SUBLANE
+        multiple). Returns the per-(group, member) block index map
+        (-1 = empty), each member's lane offset, and zeroed packed
+        arrays sized to the balanced width ``W = max_g sum(widths)``
+        with a per-slot brow array of ``W // SUBLANE`` slots.
+        """
+        _, Gs = even_group(len(widths), G)
+        bal = balance_mod.grid_group_balance(np.asarray(widths, np.int64), Gs)
+        ng = bal.num_groups
+        slot_map = bal.slots.reshape(ng, Gs)
+        W = 0
+        for g in range(ng):
+            blks = slot_map[g][slot_map[g] >= 0]
+            W = max(W, int(np.sum(np.asarray(widths)[blks])) if len(blks) else 0)
+        vals = np.zeros((ng, payload_rows, W) if payload_rows else (ng, W), vdt)
+        brow = np.zeros((ng, W // SUBLANE), np.int32)
+        xidx = np.zeros((ng, W), np.int32)
+        offsets = np.zeros((ng, Gs), np.int64)
+        for g in range(ng):
+            off = 0
+            for member in range(Gs):
+                if slot_map[g, member] >= 0:
+                    offsets[g, member] = off
+                    off += int(widths[slot_map[g, member]])
+        return slot_map, offsets, vals, brow, xidx
+
+    def _place_brow(brow_arr, g, off, w, brow):
+        """A block's ``w`` lanes span ``w // SUBLANE`` consecutive slots,
+        every one pointing at the block's row (pieces merge in the
+        scatter-add)."""
+        brow_arr[g, off // SUBLANE : (off + w) // SUBLANE] = brow
+
+    np_ = len(panels)
+    if np_:
+        widths = [pad_width(p.shape[1]) for _, p, _ in panels]
+        slot_map, offsets, p_vals, p_brow, p_xidx = _pack_lanes(
+            widths, payload_rows=B
+        )
+        for (g, member), blk in np.ndenumerate(slot_map):
+            if blk < 0:
+                continue
+            brow, panel, xidx = panels[blk]
+            k = panel.shape[1]
+            off = int(offsets[g, member])
+            p_vals[g, :, off : off + k] = panel
+            p_xidx[g, off : off + k] = xidx
+            _place_brow(p_brow, g, off, widths[blk], brow)
+    else:
+        p_vals = np.zeros((0, B, 0), vdt)
+        p_brow = np.zeros((0, 0), np.int32)
+        p_xidx = np.zeros((0, 0), np.int32)
+
+    nc = len(coos)
+    if nc:
+        widths = [pad_width(len(v)) for _, _, v, _ in coos]
+        slot_map, offsets, c_vals, c_brow, c_xidx = _pack_lanes(
+            widths, payload_rows=0
+        )
+        c_codes = np.zeros((c_vals.shape[0], c_vals.shape[-1]), np.int32)
+        for (g, member), blk in np.ndenumerate(slot_map):
+            if blk < 0:
+                continue
+            brow, codes, vals, xidx = coos[blk]
+            e = len(vals)
+            off = int(offsets[g, member])
+            c_codes[g, off : off + e] = codes
+            c_vals[g, off : off + e] = vals
+            c_xidx[g, off : off + e] = xidx
+            _place_brow(c_brow, g, off, widths[blk], brow)
+    else:
+        c_codes = np.zeros((0, 0), np.int32)
+        c_vals = np.zeros((0, 0), vdt)
+        c_brow = np.zeros((0, 0), np.int32)
+        c_xidx = np.zeros((0, 0), np.int32)
+
+    return SuperBlockStreams(
+        block_size=B, m=m, n=n, mb=mb, colagg_applied=cb.colagg.applied,
+        group_size=G,
+        dense_tiles=d_tiles, dense_brow=d_brow, dense_xidx=d_xidx,
         panel_vals=p_vals, panel_brow=p_brow, panel_xidx=p_xidx,
         coo_codes=c_codes, coo_vals=c_vals, coo_brow=c_brow, coo_xidx=c_xidx,
     )
@@ -275,20 +569,44 @@ def tile_stream_from_cb(cb: CBMatrix) -> TileStream:
     B = cb.block_size
     m, n = cb.shape
     mb, nb = -(-m // B), -(-n // B)
-    acc: dict[tuple[int, int], np.ndarray] = {}
+
+    # One pass over blocks to collect flat triplets (block granularity),
+    # then pure batch ops — no per-element Python.
+    rs, gcs, vs, brs = [], [], [], []
     for brow, bcol, fmt, r, c, v in cb.iter_blocks():
         gc = cb.global_x_index(brow, bcol, c)
-        for rr, cc, vv in zip(r, gc, v):
-            key = (brow, int(cc) // B)
-            tile = acc.setdefault(key, np.zeros((B, B), dtype=cb.val_dtype))
-            tile[rr, int(cc) % B] += vv
-    for rb in range(mb):
-        if not any(k[0] == rb for k in acc):
-            acc[(rb, 0)] = np.zeros((B, B), dtype=cb.val_dtype)
-    keys = sorted(acc.keys())
+        rs.append(np.asarray(r, np.int64))
+        gcs.append(np.asarray(gc, np.int64))
+        vs.append(v)
+        brs.append(np.full(len(v), brow, np.int64))
+    if rs:
+        r_all = np.concatenate(rs)
+        gc_all = np.concatenate(gcs)
+        v_all = np.concatenate(vs)
+        br_all = np.concatenate(brs)
+    else:
+        r_all = gc_all = br_all = np.zeros(0, np.int64)
+        v_all = np.zeros(0, cb.val_dtype)
+
+    key = br_all * nb + gc_all // B
+    ukeys, inv = np.unique(key, return_inverse=True)
+    tiles = np.zeros((len(ukeys), B, B), dtype=cb.val_dtype)
+    np.add.at(tiles, (inv, r_all, gc_all % B), v_all)
+    brow_arr = (ukeys // nb).astype(np.int32)
+    bcol_arr = (ukeys % nb).astype(np.int32)
+
+    # Coverage: every block row must own >= 1 tile (revisit init correctness).
+    missing = np.setdiff1d(np.arange(mb, dtype=np.int32), brow_arr)
+    if len(missing):
+        tiles = np.concatenate(
+            [tiles, np.zeros((len(missing), B, B), cb.val_dtype)]
+        )
+        brow_arr = np.concatenate([brow_arr, missing])
+        bcol_arr = np.concatenate([bcol_arr, np.zeros(len(missing), np.int32)])
+    order = np.argsort(brow_arr, kind="stable")
     return TileStream(
         block_size=B, m=m, n=n, mb=mb, nb=nb,
-        tiles=np.stack([acc[k] for k in keys]),
-        brow=np.asarray([k[0] for k in keys], np.int32),
-        bcol=np.asarray([k[1] for k in keys], np.int32),
+        tiles=tiles[order],
+        brow=brow_arr[order],
+        bcol=bcol_arr[order],
     )

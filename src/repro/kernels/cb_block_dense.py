@@ -1,25 +1,29 @@
-"""Pallas TPU kernel: dense-tile CB-SpMV (paper Alg. 4, TPU-native).
+"""Pallas TPU kernel: dense-tile CB-SpMV (paper Alg. 4, TPU-native, batched).
 
-One grid step processes one FMT_DENSE sub-block: a (B, B) value tile
-multiplied by the B-wide slice of x it touches, producing a (B,) partial
-result tile. Partials are scatter-added into y by the jit'd wrapper
-(ops.cb_spmv) — the deterministic TPU replacement for Alg. 4's
-``atomicAdd`` (TPU has no atomics; XLA's sorted scatter-add is
-deterministic and the combine is order-independent, so the paper's
-load-balanced slot order is preserved).
+One grid step processes one *super-tile*: ``G`` FMT_DENSE sub-blocks
+stacked vertically into a ``(G*B, B)`` value slab, each multiplied by its
+own pre-gathered ``(B,)`` slice of x, producing a ``(G, B)`` stack of
+partial result tiles. Partials are scatter-added into y by the jit'd
+wrapper (ops.cb_spmv) — the deterministic TPU replacement for Alg. 4's
+``atomicAdd`` (TPU has no atomics; XLA's scatter-add is deterministic and
+the combine is order-independent, so the balanced group schedule is
+preserved).
 
-Two x-access paths, mirroring Alg. 4's two branches:
+Batching G blocks per step amortizes per-step pipeline/DMA overhead — the
+single-block version moved one (B, B) tile per step, far below what one
+HBM->VMEM DMA can stream. The per-slot multiplies stay *separate* dots
+(unrolled over the static G) because each slot contracts against its own
+x slice; the slab still arrives as one contiguous DMA, which is where the
+win is. Grid steps write disjoint output rows and never revisit them, so
+``dimension_semantics=("parallel",)`` lets Mosaic split the grid across
+megacore halves.
 
-  * no column aggregation  -> the x block at ``bcol`` is *scalar-prefetch
-    indexed*: the index map reads the prefetched ``bcol`` array so the
-    pipeline DMAs exactly the (1, B) slice of x into VMEM — the TPU
-    analogue of "preload x into shared memory".
-  * column aggregation     -> x was pre-gathered through ``restore_cols``
-    (XLA gather) and arrives as the (nd, B) ``xg`` operand — the analogue
-    of "load x from global memory via restore_cols".
-
-The warp-shuffle reduction of Alg. 4 becomes a VPU lane reduction inside
-``jnp.dot`` — the MXU/VPU native reduction (DESIGN.md §2).
+x is always pre-gathered through ``*_xidx`` (XLA gather), which folds the
+column-aggregation ``restore_cols`` mapping or the trivial ``bcol*B + j``
+mapping — Alg. 4's two x-access branches collapse into one path at
+preprocessing time. (The old scalar-prefetch variant indexed x by block
+column; a super-tile mixes block columns, so pre-gathering is the uniform
+contract now.)
 """
 from __future__ import annotations
 
@@ -28,80 +32,42 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_call_tpu
 
 
-def _kernel_prefetched_x(bcol_ref, tiles_ref, x_ref, out_ref):
-    """x block arrives via scalar-prefetch-driven DMA (non-colagg path)."""
-    del bcol_ref  # consumed by the index map, not the body
-    tile = tiles_ref[0]                       # (B, B)
-    xb = x_ref[0]                             # (B,)
-    out_ref[0, :] = jnp.dot(
-        tile.astype(jnp.float32), xb.astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
-
-
-def _kernel_gathered_x(tiles_ref, xg_ref, out_ref):
-    """x arrives pre-gathered per block (column-aggregation path)."""
-    tile = tiles_ref[0]
-    xb = xg_ref[0]
-    out_ref[0, :] = jnp.dot(
-        tile.astype(jnp.float32), xb.astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+def _kernel_batched(tiles_ref, xg_ref, out_ref, *, group_size: int,
+                    block_size: int):
+    """One super-tile: G unrolled (B, B) @ (B,) matvecs, one output stack."""
+    B = block_size
+    for g in range(group_size):
+        tile = tiles_ref[0, g * B : (g + 1) * B, :]   # (B, B)
+        xb = xg_ref[0, g]                             # (B,)
+        out_ref[0, g, :] = jnp.dot(
+            tile.astype(jnp.float32), xb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def block_dense_spmv_prefetch(
-    tiles: jax.Array,      # (nd, B, B)
-    bcol: jax.Array,       # (nd,) int32
-    x_blocks: jax.Array,   # (nbc, B) — x reshaped into B-wide blocks
+def block_dense_spmv_batched(
+    tiles: jax.Array,   # (gd, G*B, B) stacked super-tiles
+    xg: jax.Array,      # (gd, G, B) pre-gathered x values per slot
     *,
     interpret: bool = True,
 ) -> jax.Array:
-    """Per-block partials, x fetched by scalar-prefetched block index."""
-    nd, B, _ = tiles.shape
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nd,),
-        in_specs=[
-            pl.BlockSpec((1, B, B), lambda i, bcol: (i, 0, 0)),
-            pl.BlockSpec((1, B), lambda i, bcol: (bcol[i], 0)),
-        ],
-        out_specs=pl.BlockSpec((1, B), lambda i, bcol: (i, 0)),
-    )
+    """Per-slot partials for every super-tile — (gd, G, B) float32."""
+    gd, G, B = xg.shape
     return pallas_call_tpu(
-        _kernel_prefetched_x,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
-        dimension_semantics=("arbitrary",),
-        interpret=interpret,
-        name="cb_block_dense_spmv_prefetch",
-    )(bcol, tiles, x_blocks)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def block_dense_spmv_gathered(
-    tiles: jax.Array,   # (nd, B, B)
-    xg: jax.Array,      # (nd, B) pre-gathered x values
-    *,
-    interpret: bool = True,
-) -> jax.Array:
-    """Per-block partials, x pre-gathered (column-aggregation path)."""
-    nd, B, _ = tiles.shape
-    return pallas_call_tpu(
-        _kernel_gathered_x,
-        grid=(nd,),
+        functools.partial(_kernel_batched, group_size=G, block_size=B),
+        grid=(gd,),
         in_specs=[
-            pl.BlockSpec((1, B, B), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((1, G * B, B), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, G, B), lambda i: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nd, B), jnp.float32),
-        dimension_semantics=("arbitrary",),
+        out_specs=pl.BlockSpec((1, G, B), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gd, G, B), jnp.float32),
+        dimension_semantics=("parallel",),
         interpret=interpret,
-        name="cb_block_dense_spmv_gathered",
+        name="cb_block_dense_spmv_batched",
     )(tiles, xg)

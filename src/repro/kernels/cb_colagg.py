@@ -1,14 +1,30 @@
-"""Pallas TPU kernel: column-compacted micro-panel CB-SpMV.
+"""Pallas TPU kernel: column-compacted micro-panel CB-SpMV (batched).
 
-FMT_CSR blocks (intermediate sparsity) become dense (B, K) panels after
+FMT_CSR blocks (intermediate sparsity) become dense (B, k) panels after
 per-block column compaction — the TPU re-expression of the paper's
 block-aware column aggregation (§3.3.1): all-zero columns are dropped at
 preprocessing time so every VPU lane that loads data does useful work,
 the TPU analogue of the ">= 50% warp utilization" guarantee.
 
-One grid step = one panel: a (B, Kp) dense multiply against the Kp
-pre-gathered x values (gathered through ``restore_cols`` by XLA — the
-Alg. 3 colagg branch). Partials combine by scatter-add in ops.cb_spmv.
+One grid step = one *panel group*: many panels lane-packed side by side
+into a fused ``(B, W)`` slab. Lane->slot routing is positional — slot =
+``lane // SUBLANE`` — because the packer rounds every panel's width to a
+SUBLANE multiple (its width bucket) and lays panels at aligned offsets.
+A panel wider than one slot simply owns several consecutive slots whose
+partials the scatter-add combine reunites (the combine is additive, so
+splitting a panel's columns across slots is exact). The whole group then
+reduces with
+
+    tmp = slab * xg                 elementwise,   (B, W)
+    out = tmp.reshape(B, S, SUBLANE).sum(lanes)    (B, S) -> (S, B)
+
+— a plain strided lane reduction, O(B*W) work with *no* data-dependent
+segment contraction, so the batched step costs the same FLOPs as the
+panels it fuses on any backend. Batching buys the DMA/step amortization:
+one contiguous slab per step instead of one panel per step, and a wide
+outlier pads only its own group instead of the global ``Kp``. Grid steps
+are independent (scatter-add combine outside), so
+``dimension_semantics=("parallel",)`` enables megacore partitioning.
 
 The CSR row_ptr of the portable format is *dissolved* at preprocessing:
 rows are materialized into the panel's row axis, so the kernel needs no
@@ -24,36 +40,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.compat import pallas_call_tpu
+from repro.core.streams import SUBLANE
 
 
-def _panel_kernel(panel_ref, xg_ref, out_ref):
-    panel = panel_ref[0]   # (B, Kp)
-    xg = xg_ref[0]         # (Kp,)
-    out_ref[0, :] = jnp.dot(
-        panel.astype(jnp.float32), xg.astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+def _panel_kernel_batched(panels_ref, xg_ref, out_ref, *, slots: int):
+    slab = panels_ref[0].astype(jnp.float32)   # (B, W)
+    xg = xg_ref[0].astype(jnp.float32)         # (W,)
+    tmp = slab * xg[None, :]                   # (B, W)
+    B = slab.shape[0]
+    out = tmp.reshape(B, slots, SUBLANE).sum(axis=2)   # (B, S)
+    out_ref[0] = out.T
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def panel_spmv(
-    panels: jax.Array,  # (np_, B, Kp)
-    xg: jax.Array,      # (np_, Kp)
+def panel_spmv_batched(
+    panels: jax.Array,  # (gp, B, W) lane-packed panel groups, W % SUBLANE == 0
+    xg: jax.Array,      # (gp, W) pre-gathered x values
     *,
     interpret: bool = True,
 ) -> jax.Array:
-    """Per-panel partial y tiles — (np_, B) float32."""
-    np_, B, Kp = panels.shape
+    """Per-slot partial y tiles — (gp, W // SUBLANE, B) float32."""
+    gp, B, W = panels.shape
+    if W % SUBLANE:
+        raise ValueError(f"packed width {W} not a multiple of {SUBLANE}")
+    slots = W // SUBLANE
     return pallas_call_tpu(
-        _panel_kernel,
-        grid=(np_,),
+        functools.partial(_panel_kernel_batched, slots=slots),
+        grid=(gp,),
         in_specs=[
-            pl.BlockSpec((1, B, Kp), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((1, B, W), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_, B), jnp.float32),
-        dimension_semantics=("arbitrary",),
+        out_specs=pl.BlockSpec((1, slots, B), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, slots, B), jnp.float32),
+        dimension_semantics=("parallel",),
         interpret=interpret,
-        name="cb_colagg_panel_spmv",
+        name="cb_colagg_panel_spmv_batched",
     )(panels, xg)

@@ -1,23 +1,32 @@
-"""Pallas TPU kernel: faithful block-COO CB-SpMV (paper Alg. 3).
+"""Pallas TPU kernel: faithful block-COO CB-SpMV (paper Alg. 3, batched).
 
 FMT_COO blocks (super-sparse) ship as element lists with the paper's
 *packed coordinates*: ``code = col << bits | row`` (Alg. 3 decodes
 ``row = b & 15; col = b >> 4``; we generalize the mask to the block
-size). The kernel decodes coordinates on-chip and performs the
-gather-multiply-scatter with two one-hot contractions:
+size). One grid step consumes one *element group*: many blocks' element
+lists lane-packed into a single ``(W,)`` payload at SUBLANE-aligned
+offsets, so lane->slot routing is positional (slot = ``lane // SUBLANE``;
+a block with many elements owns several consecutive slots, whose partial
+tiles the additive scatter combine reunites). The kernel decodes
+coordinates on-chip and scatters within each slot with a one-hot product
+plus a strided lane reduction:
 
-    xv   = onehot(col) @ x_block          (the x gather)
-    y    = onehot(row)^T @ (val * xv)     (the atomicAdd scatter)
+    row      = code & mask                   block-local row (Alg. 3)
+    weighted = (val * xv)[:, None] * onehot(row)        (W, B)
+    out      = weighted.reshape(S, SUBLANE, B).sum(lanes)   (S, B)
 
-Both contractions are MXU matmuls — the TPU-native way to express
-data-dependent gather/scatter without atomics; the scatter is exact and
-deterministic (summation order fixed by the contraction), unlike
-``atomicAdd``. Padding elements carry ``val == 0`` so they contribute
+The one-hot is only ``B`` wide — identical per-element work to the
+unbatched kernel — and the slot split is a free reshape, so batching
+costs no extra FLOPs on any backend; it buys the step/DMA amortization
+and per-group (instead of global ``Ep``) padding. The reduction order is
+fixed by the contraction, so the result is exact and deterministic,
+unlike ``atomicAdd``. Padding lanes carry ``val == 0`` and contribute
 nothing regardless of their decoded coordinates.
 
-Like Alg. 3, x access has two branches: scalar-prefetched x block
-(non-colagg; "preload into shared memory") or pre-gathered values
-(colagg; "read d_x via restore_cols").
+x arrives pre-gathered (``coo_xidx`` folds the colagg ``restore_cols``
+mapping or the trivial one — Alg. 3's two x branches resolved at
+preprocessing). Steps write disjoint output rows, so
+``dimension_semantics=("parallel",)`` allows megacore partitioning.
 """
 from __future__ import annotations
 
@@ -26,10 +35,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_call_tpu
 from repro.core.aggregation import coord_bits
+from repro.core.streams import SUBLANE
 
 
 def _decode(codes, B):
@@ -44,90 +53,45 @@ def _decode(codes, B):
     return rows, cols
 
 
-def _coo_kernel_prefetched_x(brow_bcol_ref, codes_ref, vals_ref, x_ref,
-                             out_ref, *, block_size: int):
-    del brow_bcol_ref
+def _coo_kernel_batched(codes_ref, vals_ref, xg_ref, out_ref, *,
+                        block_size: int, slots: int):
     B = block_size
-    codes = codes_ref[0]                       # (Ep,) int32
-    vals = vals_ref[0].astype(jnp.float32)     # (Ep,)
-    xb = x_ref[0].astype(jnp.float32)          # (B,)
-    rows, cols = _decode(codes, B)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], B), 1)
-    col_onehot = (cols[:, None] == iota).astype(jnp.float32)   # (Ep, B)
-    row_onehot = (rows[:, None] == iota).astype(jnp.float32)   # (Ep, B)
-    xv = jnp.dot(col_onehot, xb, preferred_element_type=jnp.float32)
-    out_ref[0, :] = jnp.dot(
-        row_onehot.T, vals * xv, preferred_element_type=jnp.float32
-    )
-
-
-def _coo_kernel_gathered_x(codes_ref, vals_ref, xg_ref, out_ref,
-                           *, block_size: int):
-    B = block_size
-    codes = codes_ref[0]
-    vals = vals_ref[0].astype(jnp.float32)
-    xv = xg_ref[0].astype(jnp.float32)         # (Ep,) pre-gathered
+    codes = codes_ref[0]                        # (W,) int32
+    vals = vals_ref[0].astype(jnp.float32)      # (W,)
+    xv = xg_ref[0].astype(jnp.float32)          # (W,) pre-gathered
     rows, _ = _decode(codes, B)
     iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], B), 1)
-    row_onehot = (rows[:, None] == iota).astype(jnp.float32)
-    out_ref[0, :] = jnp.dot(
-        row_onehot.T, vals * xv, preferred_element_type=jnp.float32
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def coo_spmv_prefetch(
-    codes: jax.Array,     # (nc, Ep) int32
-    vals: jax.Array,      # (nc, Ep)
-    bcol: jax.Array,      # (nc,) int32
-    x_blocks: jax.Array,  # (nbc, B)
-    *,
-    interpret: bool = True,
-) -> jax.Array:
-    nc, Ep = codes.shape
-    B = x_blocks.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nc,),
-        in_specs=[
-            pl.BlockSpec((1, Ep), lambda i, bcol: (i, 0)),
-            pl.BlockSpec((1, Ep), lambda i, bcol: (i, 0)),
-            pl.BlockSpec((1, B), lambda i, bcol: (bcol[i], 0)),
-        ],
-        out_specs=pl.BlockSpec((1, B), lambda i, bcol: (i, 0)),
-    )
-    return pallas_call_tpu(
-        functools.partial(_coo_kernel_prefetched_x, block_size=B),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((nc, B), jnp.float32),
-        dimension_semantics=("arbitrary",),
-        interpret=interpret,
-        name="cb_coo_spmv_prefetch",
-    )(bcol, codes, vals, x_blocks)
+    onehot = (rows[:, None] == iota).astype(jnp.float32)     # (W, B)
+    weighted = (vals * xv)[:, None] * onehot                 # (W, B)
+    out_ref[0] = weighted.reshape(slots, SUBLANE, B).sum(axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
-def coo_spmv_gathered(
-    codes: jax.Array,  # (nc, Ep) int32
-    vals: jax.Array,   # (nc, Ep)
-    xg: jax.Array,     # (nc, Ep) pre-gathered x values
+def coo_spmv_batched(
+    codes: jax.Array,  # (gc, W) int32 lane-packed coordinates
+    vals: jax.Array,   # (gc, W) values (0 on padding lanes)
+    xg: jax.Array,     # (gc, W) pre-gathered x values
     *,
     block_size: int,
     interpret: bool = True,
 ) -> jax.Array:
-    nc, Ep = codes.shape
+    """Per-slot partial y tiles — (gc, W // SUBLANE, B) float32."""
+    gc, W = codes.shape
+    if W % SUBLANE:
+        raise ValueError(f"packed width {W} not a multiple of {SUBLANE}")
+    slots = W // SUBLANE
     B = block_size
     return pallas_call_tpu(
-        functools.partial(_coo_kernel_gathered_x, block_size=B),
-        grid=(nc,),
+        functools.partial(_coo_kernel_batched, block_size=B, slots=slots),
+        grid=(gc,),
         in_specs=[
-            pl.BlockSpec((1, Ep), lambda i: (i, 0)),
-            pl.BlockSpec((1, Ep), lambda i: (i, 0)),
-            pl.BlockSpec((1, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
+            pl.BlockSpec((1, W), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, B), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nc, B), jnp.float32),
-        dimension_semantics=("arbitrary",),
+        out_specs=pl.BlockSpec((1, slots, B), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gc, slots, B), jnp.float32),
+        dimension_semantics=("parallel",),
         interpret=interpret,
-        name="cb_coo_spmv_gathered",
+        name="cb_coo_spmv_batched",
     )(codes, vals, xg)

@@ -1,9 +1,24 @@
 """jit'd public entry points for the CB-SpMV / CB-SpMM kernels.
 
-``cb_spmv(streams, x)`` dispatches each per-format stream to its Pallas
-kernel (the paper's "segregated per-format streams" replacement for
-intra-kernel branching — TPU cores have no divergence mechanism, uniform
-kernels win) and combines partial block results with a single scatter-add.
+``cb_spmv(streams, x)`` runs the batched super-block execution engine:
+each per-format stream becomes at most ONE ``pallas_call`` whose grid
+covers every super-block group of that format (the paper's "segregated
+per-format streams" replacement for intra-kernel branching — TPU cores
+have no divergence mechanism, uniform kernels win), and all per-format
+partials are combined by a SINGLE fused scatter-add into the ``(mb, B)``
+result — one deterministic combine instead of three.
+
+``streams`` may be either
+
+  * ``SuperBlockStreams`` (from ``build_super_streams``) — blocks already
+    packed into width-bucketed, load-balanced groups at preprocessing
+    time; ``group_size`` is baked into the stream, or
+  * ``SpMVStreams`` (from ``build_streams``) — the one-block-per-row
+    layout. ``group_size=G`` then regroups it on the fly with pure
+    reshapes (jit-safe, no host round-trip): G rows fuse into one grid
+    step. On-the-fly regrouping keeps each format's global padding width
+    (only the host-side packer can shrink it), but it already buys the
+    batching win: 1/G as many grid steps, G times the payload per DMA.
 
 ``impl`` selects between the Pallas kernels ("pallas", interpret=True on
 CPU; compiled Mosaic on TPU) and the pure-XLA reference ("reference",
@@ -17,70 +32,152 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.streams import SpMVStreams, TileStream
+from repro.core.streams import (
+    SUBLANE, SpMVStreams, SuperBlockStreams, TileStream, even_group,
+)
 
 from . import cb_block_dense, cb_colagg, cb_coo, ref
 from . import cb_spmm as _cb_spmm_kernel
-
-
-def _x_blocks(x: jax.Array, B: int, nbc: int) -> jax.Array:
-    """Reshape x into (nbc, B) blocks, zero-padding the ragged tail."""
-    pad = nbc * B - x.shape[0]
-    return jnp.pad(x, (0, pad)).reshape(nbc, B)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def _pad_rows(arr: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad axis 0 to ``rows`` (ragged tails regroup as inert slots)."""
+    pad = [(0, rows - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad)
+
+
+def _slot_brow(brow_blocks: jax.Array, width: int, groups: int) -> jax.Array:
+    """Expand per-block rows to per-SUBLANE-slot rows (block-major lanes)."""
+    per_block = width // SUBLANE
+    if groups == 0 or per_block == 0:
+        return jnp.zeros((groups, 0), jnp.int32)
+    return jnp.repeat(brow_blocks.reshape(-1), per_block).reshape(groups, -1)
+
+
+def _regroup(streams: SpMVStreams, G: int) -> SuperBlockStreams:
+    """Fuse G one-block rows per super-block row with pure reshapes.
+
+    Padding rows appended to ragged tails carry zero payload and brow 0,
+    so they scatter-add exact zeros. The lane order of fused panel/coo
+    rows is block-major (member g owns lanes [g*K, (g+1)*K)); since the
+    flat stream's K is already a SUBLANE multiple, the per-slot brow
+    arrays are just each block's row repeated over its K // SUBLANE
+    slots. Each format uses its own evened member count.
+    """
+    B, mb = streams.block_size, streams.mb
+
+    gd, Gd = even_group(streams.num_dense, G)
+    d_tiles = _pad_rows(streams.dense_tiles, gd * Gd).reshape(gd, Gd * B, B)
+    d_brow = _pad_rows(streams.dense_brow, gd * Gd).reshape(gd, Gd)
+    d_xidx = _pad_rows(streams.dense_xidx, gd * Gd).reshape(gd, Gd, B)
+
+    np_, Kp = streams.panel_vals.shape[0], streams.panel_vals.shape[2]
+    gp, Gp = even_group(np_, G)
+    p_vals = (
+        _pad_rows(streams.panel_vals, gp * Gp)
+        .reshape(gp, Gp, B, Kp)
+        .transpose(0, 2, 1, 3)
+        .reshape(gp, B, Gp * Kp)
+    )
+    p_xidx = _pad_rows(streams.panel_xidx, gp * Gp).reshape(gp, Gp * Kp)
+    p_brow = _slot_brow(_pad_rows(streams.panel_brow, gp * Gp), Kp, gp)
+
+    nc, Ep = streams.coo_codes.shape
+    gc, Gc = even_group(nc, G)
+    c_codes = _pad_rows(streams.coo_codes, gc * Gc).reshape(gc, Gc * Ep)
+    c_vals = _pad_rows(streams.coo_vals, gc * Gc).reshape(gc, Gc * Ep)
+    c_xidx = _pad_rows(streams.coo_xidx, gc * Gc).reshape(gc, Gc * Ep)
+    c_brow = _slot_brow(_pad_rows(streams.coo_brow, gc * Gc), Ep, gc)
+
+    return SuperBlockStreams(
+        block_size=B, m=streams.m, n=streams.n, mb=mb,
+        colagg_applied=streams.colagg_applied, group_size=G,
+        dense_tiles=d_tiles, dense_brow=d_brow, dense_xidx=d_xidx,
+        panel_vals=p_vals, panel_brow=p_brow, panel_xidx=p_xidx,
+        coo_codes=c_codes, coo_vals=c_vals, coo_brow=c_brow,
+        coo_xidx=c_xidx,
+    )
+
+
+def _super_partials_pallas(s: SuperBlockStreams, x: jax.Array, interp: bool):
+    """One pallas_call per present format -> [(partials (t, B), brow (t,))].
+
+    Slot counts are positional: the kernels derive them from the payload
+    widths (``W // SUBLANE`` for panel/coo, the brow shape for dense).
+    """
+    B = s.block_size
+    parts = []
+    if s.num_dense_groups:
+        part = cb_block_dense.block_dense_spmv_batched(
+            s.dense_tiles, x[s.dense_xidx], interpret=interp
+        )
+        parts.append((part.reshape(-1, B), s.dense_brow.reshape(-1)))
+    if s.num_panel_groups:
+        part = cb_colagg.panel_spmv_batched(
+            s.panel_vals, x[s.panel_xidx], interpret=interp,
+        )
+        parts.append((part.reshape(-1, B), s.panel_brow.reshape(-1)))
+    if s.num_coo_groups:
+        part = cb_coo.coo_spmv_batched(
+            s.coo_codes, s.coo_vals, x[s.coo_xidx],
+            block_size=B, interpret=interp,
+        )
+        parts.append((part.reshape(-1, B), s.coo_brow.reshape(-1)))
+    return parts
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "group_size"))
 def cb_spmv(
-    streams: SpMVStreams,
+    streams: SpMVStreams | SuperBlockStreams,
     x: jax.Array,
     *,
     impl: str = "pallas",
     interpret: bool | None = None,
+    group_size: int | None = None,
 ) -> jax.Array:
-    """y = A @ x over the CB streams. x: (n,) -> y: (m,) float32."""
+    """y = A @ x over the CB streams. x: (n,) -> y: (m,) float32.
+
+    ``group_size`` (static) only applies to ``SpMVStreams`` input: blocks
+    are fused G per grid step via ``_regroup``. ``SuperBlockStreams``
+    carry their group size from the host-side packer; passing a
+    conflicting value is an error.
+
+    ``impl="reference"`` stays an *independent* oracle: it consumes the
+    stream layout as given (no regrouping), so batched Pallas results are
+    always checked against math that never touched the batching code.
+    """
+    if group_size is not None and group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    if isinstance(streams, SuperBlockStreams):
+        if group_size is not None and group_size != streams.group_size:
+            raise ValueError(
+                f"stream was packed with group_size={streams.group_size}; "
+                f"cannot re-batch to {group_size} post hoc"
+            )
+
     if impl == "reference":
+        if isinstance(streams, SuperBlockStreams):
+            return ref.super_spmv(streams, x)
         return ref.cb_spmv(streams, x)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
+    sup = (streams if isinstance(streams, SuperBlockStreams)
+           else _regroup(streams, group_size or 1))
     interp = (not _on_tpu()) if interpret is None else interpret
 
-    B, mb = streams.block_size, streams.mb
+    B, mb = sup.block_size, sup.mb
+    parts = _super_partials_pallas(sup, x, interp)
     y = jnp.zeros((mb, B), jnp.float32)
-
-    if streams.num_dense:
-        if streams.colagg_applied:
-            part = cb_block_dense.block_dense_spmv_gathered(
-                streams.dense_tiles, x[streams.dense_xidx], interpret=interp
-            )
-        else:
-            nbc = -(-streams.n // B)
-            part = cb_block_dense.block_dense_spmv_prefetch(
-                streams.dense_tiles, streams.dense_bcol,
-                _x_blocks(x, B, nbc), interpret=interp,
-            )
-        y = y.at[streams.dense_brow].add(part)
-
-    if streams.num_panel:
-        part = cb_colagg.panel_spmv(
-            streams.panel_vals, x[streams.panel_xidx], interpret=interp
-        )
-        y = y.at[streams.panel_brow].add(part)
-
-    if streams.num_coo:
-        # The element stream always uses pre-gathered x: its xidx already
-        # folds colagg restore (or the trivial mapping), and per-element
-        # gathers are XLA's job either way (Alg. 3's d_x branch).
-        part = cb_coo.coo_spmv_gathered(
-            streams.coo_codes, streams.coo_vals, x[streams.coo_xidx],
-            block_size=B, interpret=interp,
-        )
-        y = y.at[streams.coo_brow].add(part)
-
-    return y.reshape(-1)[: streams.m]
+    if parts:
+        # ONE fused scatter-add over every format's per-slot partials.
+        all_parts = jnp.concatenate([p for p, _ in parts], axis=0)
+        all_brow = jnp.concatenate([b for _, b in parts], axis=0)
+        y = y.at[all_brow].add(all_parts)
+    return y.reshape(-1)[: sup.m]
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_n"))

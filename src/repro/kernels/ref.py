@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import coord_bits
-from repro.core.streams import SpMVStreams, TileStream
+from repro.core.streams import SpMVStreams, SuperBlockStreams, TileStream
 
 
 def _acc_dtype(*dts) -> jnp.dtype:
@@ -74,6 +74,57 @@ def cb_spmv(streams: SpMVStreams, x: jax.Array) -> jax.Array:
         y += coo_spmv(streams.coo_codes, streams.coo_vals, streams.coo_brow,
                       x[streams.coo_xidx], mb, B)
     return y.reshape(-1)[: streams.m]
+
+
+# ---------------------------------------------------------------------------
+# Super-block (batched) stream oracle
+# ---------------------------------------------------------------------------
+
+def super_spmv(s: SuperBlockStreams, x: jax.Array) -> jax.Array:
+    """CB-SpMV over packed super-block streams — the batched ops contract.
+
+    Mirror of the batched kernels' math: slot routing is positional
+    (slot = lane // SUBLANE), so splitting a fused payload into per-slot
+    partials is a strided reshape-sum — O(payload) work on any backend,
+    no data-dependent segment contraction. Empty slots carry zero
+    payload and brow 0, so they add exact zeros.
+    """
+    from repro.core.streams import SUBLANE
+
+    B, mb = s.block_size, s.mb
+    acc = _acc_dtype(s.panel_vals.dtype, x.dtype)
+    parts, brows = [], []
+    if s.num_dense_groups:
+        gd, Gd = s.dense_brow.shape
+        tiles = s.dense_tiles.reshape(gd, Gd, B, B).astype(acc)
+        xg = x[s.dense_xidx].astype(acc)                      # (gd, Gd, B)
+        part = jnp.einsum("gsrc,gsc->gsr", tiles, xg)
+        parts.append(part.reshape(-1, B))
+        brows.append(s.dense_brow.reshape(-1))
+    if s.num_panel_groups:
+        gp, W = s.panel_xidx.shape
+        S = W // SUBLANE
+        xg = x[s.panel_xidx].astype(acc).reshape(gp, S, SUBLANE)
+        vals = s.panel_vals.astype(acc).reshape(gp, B, S, SUBLANE)
+        part = jnp.einsum("grsk,gsk->gsr", vals, xg)
+        parts.append(part.reshape(-1, B))
+        brows.append(s.panel_brow.reshape(-1))
+    if s.num_coo_groups:
+        gc, W = s.coo_codes.shape
+        S = W // SUBLANE
+        bits = coord_bits(B)
+        rows = s.coo_codes & ((1 << bits) - 1)
+        prod = (s.coo_vals.astype(acc)
+                * x[s.coo_xidx].astype(acc)).reshape(gc, S, SUBLANE)
+        onehot = (rows.reshape(gc, S, SUBLANE)[..., None]
+                  == jnp.arange(B, dtype=rows.dtype)).astype(acc)
+        part = jnp.einsum("gsk,gskr->gsr", prod, onehot)
+        parts.append(part.reshape(-1, B))
+        brows.append(s.coo_brow.reshape(-1))
+    y = jnp.zeros((mb, B), acc)
+    if parts:
+        y = y.at[jnp.concatenate(brows)].add(jnp.concatenate(parts))
+    return y.reshape(-1)[: s.m]
 
 
 # ---------------------------------------------------------------------------

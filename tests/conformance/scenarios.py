@@ -86,6 +86,29 @@ def _ragged_tail(seed=0):
             (131, 93))
 
 
+def _bucket_widths(seed=0):
+    """Row bands whose distinct-column counts straddle the sublane (8)
+    boundary: per-block compacted widths land on 1/7/8/9/15/16/17 — the
+    exact edges the width-bucketed super-block packer must round and pack
+    without losing or double-counting lanes."""
+    rng = np.random.default_rng(seed)
+    m, n = 136, 128
+    rows_l, cols_l = [], []
+    for i, k in enumerate((1, 7, 8, 9, 15, 16, 17)):
+        rband = np.arange(i * 18, min(i * 18 + 12, m))
+        csel = (np.arange(k) * 5 + i * 11) % n
+        for rr in rband[::2]:
+            rows_l.append(np.full(len(csel), rr))
+            cols_l.append(csel)
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    key = rows * n + cols
+    _, idx = np.unique(key, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+    vals = rng.standard_normal(len(rows))
+    return rows.astype(np.int64), cols.astype(np.int64), vals, (m, n)
+
+
 STRUCTURES = {
     "uniform": _uniform,
     "power_law": _power_law,
@@ -94,6 +117,7 @@ STRUCTURES = {
     "empty_rows_cols": _empty_rows_cols,
     "single_element": _single_element,
     "ragged_tail": _ragged_tail,
+    "bucket_widths": _bucket_widths,
 }
 
 
@@ -183,6 +207,39 @@ def spmv_scenarios() -> list[Scenario]:
     for B in BLOCK_SIZES:
         grid.append(Scenario("power_law", B, "auto", dtype="float64"))
     return grid
+
+
+GROUP_SIZES = (1, 4, 16)
+
+
+def batched_scenarios() -> list[tuple[Scenario, int]]:
+    """The group-size axis for the batched super-block engine.
+
+    A curated slice — structures that stress grouping (ragged block
+    counts, width buckets, single blocks) crossed with ``GROUP_SIZES``,
+    plus forced-format cells so every kernel sees every group size. The
+    full structure grid already runs at group_size=1 via
+    ``spmv_scenarios``; this axis covers what batching adds.
+    """
+    grid: list[tuple[Scenario, int]] = []
+    for G in GROUP_SIZES:
+        for structure in STRUCTURES:
+            for B in (8, 16):
+                grid.append((Scenario(structure, B, "auto"), G))
+        # every intra-block format x colagg at one B, every group size
+        for fmt in ("coo", "csr", "dense"):
+            for colagg in (True, False):
+                grid.append(
+                    (Scenario("uniform", 16, colagg, forced_fmt=fmt), G)
+                )
+        # non-power-of-two block size through the batched decode path
+        grid.append((Scenario("power_law", 24, "auto"), G))
+        grid.append((Scenario("bucket_widths", 24, True), G))
+    return grid
+
+
+def batched_ids(grid: list[tuple[Scenario, int]]) -> list[str]:
+    return [f"{s.name}-G{g}" for s, g in grid]
 
 
 def scenario_ids(scenarios: list[Scenario]) -> list[str]:

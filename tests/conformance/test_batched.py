@@ -1,0 +1,195 @@
+"""Conformance for the batched super-block execution engine.
+
+Contract, per (scenario, group_size) cell:
+
+  * the host-packed ``SuperBlockStreams`` Pallas path, the jit-side
+    ``group_size=G`` regroup path, and the super-stream reference oracle
+    all agree with the *unbatched* reference to <= 1e-5 — batching is a
+    schedule change, never a numerics change;
+  * with integer-valued data (every product/sum exactly representable in
+    float32) the batched and unbatched results are BIT-equal: the fused
+    scatter-add combine may reorder additions, and reordering exact sums
+    must not change a single ULP;
+  * packing invariants: every real block lands in exactly one group
+    slot, segment ids stay inside the group, and the bucketed payload
+    never exceeds the global-max-padded payload it replaces.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CBMatrix
+from repro.core.spmv_ref import dense_oracle
+from repro.core.streams import build_streams, build_super_streams, pad_width
+from repro.kernels import ops
+
+from .scenarios import Scenario, batched_ids, batched_scenarios
+
+pytestmark = pytest.mark.conformance
+
+BATCHED = batched_scenarios()
+
+
+@pytest.mark.parametrize("scn,G", BATCHED, ids=batched_ids(BATCHED))
+def test_batched_agrees_with_unbatched_reference(scn, G):
+    rows, cols, vals, shape = scn.build_coo()
+    cb = scn.build()
+    streams = build_streams(cb).device_put()
+    sbs = build_super_streams(cb, group_size=G).device_put()
+    x = np.random.default_rng(3).standard_normal(shape[1]).astype(np.float32)
+    xj = jnp.asarray(x)
+
+    y_ref = np.asarray(ops.cb_spmv(streams, xj, impl="reference"))
+    y_packed = np.asarray(
+        ops.cb_spmv(sbs, xj, impl="pallas", interpret=True)
+    )
+    y_regroup = np.asarray(
+        ops.cb_spmv(streams, xj, impl="pallas", interpret=True, group_size=G)
+    )
+    y_super_ref = np.asarray(ops.cb_spmv(sbs, xj, impl="reference"))
+
+    np.testing.assert_allclose(y_packed, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_regroup, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_super_ref, y_ref, rtol=1e-5, atol=1e-5)
+
+    expected = dense_oracle(rows, cols, vals.astype(np.float32), shape, x)
+    np.testing.assert_allclose(y_packed, expected, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B", [8, 16, 24])
+@pytest.mark.parametrize("G", [1, 4, 16])
+def test_batched_combine_bit_equality(B, G):
+    """Batched vs unbatched must be bit-identical on exact arithmetic.
+
+    Integer-valued matrix and x keep every product and partial sum
+    exactly representable in float32, so the only way batched output can
+    differ is a real packing bug (lost/duplicated/misrouted block), not
+    floating-point reassociation.
+    """
+    rng = np.random.default_rng(B * 100 + G)
+    m, n = 144, 136
+    nnz = 900
+    r = rng.integers(0, m, nnz)
+    c = rng.integers(0, n, nnz)
+    key = r * n + c
+    _, idx = np.unique(key, return_index=True)
+    r, c = r[idx], c[idx]
+    v = rng.integers(1, 8, len(r)).astype(np.float32)
+    x = rng.integers(-4, 5, n).astype(np.float32)
+
+    cb = CBMatrix.from_coo(r, c, v, (m, n), block_size=B,
+                           val_dtype=np.float32)
+    streams = build_streams(cb).device_put()
+    sbs = build_super_streams(cb, group_size=G).device_put()
+    xj = jnp.asarray(x)
+
+    y_unbatched = np.asarray(
+        ops.cb_spmv(streams, xj, impl="pallas", interpret=True)
+    )
+    y_packed = np.asarray(
+        ops.cb_spmv(sbs, xj, impl="pallas", interpret=True)
+    )
+    y_regroup = np.asarray(
+        ops.cb_spmv(streams, xj, impl="pallas", interpret=True, group_size=G)
+    )
+    np.testing.assert_array_equal(y_packed, y_unbatched)
+    np.testing.assert_array_equal(y_regroup, y_unbatched)
+
+
+@pytest.mark.parametrize("G", [4, 16])
+def test_single_block_matrix(G):
+    """One real block, group size far larger: all pad slots stay inert."""
+    scn = Scenario("single_element", 16)
+    rows, cols, vals, shape = scn.build_coo()
+    cb = scn.build()
+    sbs = build_super_streams(cb, group_size=G).device_put()
+    x = np.random.default_rng(0).standard_normal(shape[1]).astype(np.float32)
+    y = np.asarray(ops.cb_spmv(sbs, jnp.asarray(x), impl="pallas",
+                               interpret=True))
+    expected = dense_oracle(rows, cols, vals.astype(np.float32), shape, x)
+    np.testing.assert_allclose(y, expected, rtol=3e-4, atol=3e-4)
+
+
+def test_group_size_not_dividing_block_count():
+    """Ragged tail groups (num_blocks % G != 0) must pack without loss."""
+    scn = Scenario("uniform", 8)
+    cb = scn.build()
+    num_blocks = cb.num_blocks
+    G = 7
+    assert num_blocks % G != 0, "pick a G that leaves a ragged tail"
+    _, _, _, shape = scn.build_coo()
+    rows, cols, vals, _ = scn.build_coo()
+    sbs = build_super_streams(cb, group_size=G).device_put()
+    x = np.random.default_rng(1).standard_normal(shape[1]).astype(np.float32)
+    y = np.asarray(ops.cb_spmv(sbs, jnp.asarray(x), impl="pallas",
+                               interpret=True))
+    expected = dense_oracle(rows, cols, vals.astype(np.float32), shape, x)
+    np.testing.assert_allclose(y, expected, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("G", [1, 4, 16])
+def test_super_stream_packing_invariants(G):
+    """Structure of the packed streams, independent of numerics."""
+    scn = Scenario("bucket_widths", 8, True)
+    cb = scn.build()
+    streams = build_streams(cb)
+    sbs = build_super_streams(cb, group_size=G)
+    B = cb.block_size
+
+    assert sbs.group_size == G
+    # block-count conservation: slots with a nonzero brow or payload
+    # cover every real block exactly once per format
+    assert (sbs.num_dense_groups * G >= streams.num_dense
+            and sbs.num_panel_groups * G >= streams.num_panel
+            and sbs.num_coo_groups * G >= streams.num_coo)
+    # value mass is conserved exactly (permutation, never arithmetic)
+    for packed, flat in (
+        (sbs.dense_tiles, streams.dense_tiles),
+        (sbs.panel_vals, streams.panel_vals),
+        (sbs.coo_vals, streams.coo_vals),
+    ):
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(packed).ravel()[np.asarray(packed).ravel() != 0]),
+            np.sort(np.asarray(flat).ravel()[np.asarray(flat).ravel() != 0]),
+        )
+    # slot structure: one brow entry per SUBLANE lane chunk, rows in range
+    from repro.core.streams import SUBLANE
+    if sbs.num_panel_groups:
+        assert sbs.panel_brow.shape[1] == sbs.panel_vals.shape[-1] // SUBLANE
+        assert np.asarray(sbs.panel_brow).max() < cb.shape[0]
+    if sbs.num_coo_groups:
+        assert sbs.coo_brow.shape[1] == sbs.coo_codes.shape[-1] // SUBLANE
+        assert np.asarray(sbs.coo_brow).max() < cb.shape[0]
+    # bucketed padding never exceeds the global-max padding it replaces
+    uw = streams.padded_work()
+    sw = sbs.padded_work()
+    Kp = streams.panel_vals.shape[-1]
+    Ep = streams.coo_codes.shape[-1]
+    if streams.num_panel:
+        regroup_panel = -(-streams.num_panel // G) * B * G * Kp
+        assert sw["panel"] <= regroup_panel
+    if streams.num_coo:
+        regroup_coo = -(-streams.num_coo // G) * G * Ep
+        assert sw["coo"] <= regroup_coo
+    assert uw["dense"] <= sw["dense"]  # dense pads empty slots only
+
+
+def test_empty_streams_have_zero_width():
+    """The padding policy: absent formats allocate nothing (no phantom
+    (0, B, 8) buffers from a silent minimum)."""
+    m = n = 32
+    rr, cc = np.meshgrid(np.arange(m), np.arange(n), indexing="ij")
+    v = np.ones(m * n, np.float32)
+    cb = CBMatrix.from_coo(rr.ravel(), cc.ravel(), v, (m, n), block_size=16,
+                           val_dtype=np.float32)
+    s = build_streams(cb)
+    assert s.num_dense == 4
+    assert s.num_panel == 0 and s.panel_vals.shape == (0, 16, 0)
+    assert s.num_coo == 0 and s.coo_codes.shape == (0, 0)
+    # and the widths that DO exist are sublane-aligned
+    scn2 = Scenario("uniform", 16, True)
+    s2 = build_streams(scn2.build())
+    if s2.num_panel:
+        assert s2.panel_vals.shape[-1] == pad_width(s2.panel_vals.shape[-1])
+    if s2.num_coo:
+        assert s2.coo_codes.shape[-1] == pad_width(s2.coo_codes.shape[-1])

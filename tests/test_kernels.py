@@ -58,52 +58,100 @@ def test_cb_spmv_dtypes(dtype):
     np.testing.assert_allclose(np.asarray(got), expected, rtol=1e-3, atol=1e-3)
 
 
-def test_block_dense_kernel_unit():
-    """dense-tile kernel vs its own oracle on a controlled stream."""
+@pytest.mark.parametrize("G", [1, 3])
+def test_block_dense_kernel_unit(G):
+    """batched dense-tile kernel vs its own oracle on a controlled stream."""
     rng = np.random.default_rng(0)
-    nd, B, mb, nbc = 7, 16, 5, 6
-    tiles = rng.standard_normal((nd, B, B)).astype(np.float32)
-    brow = rng.integers(0, mb, nd).astype(np.int32)
-    bcol = rng.integers(0, nbc, nd).astype(np.int32)
-    x = rng.standard_normal(nbc * B).astype(np.float32)
-    xb = x.reshape(nbc, B)
-    part = cb_block_dense.block_dense_spmv_prefetch(
-        jnp.asarray(tiles), jnp.asarray(bcol), jnp.asarray(xb), interpret=True
+    gd, B, mb = 4, 16, 5
+    tiles = rng.standard_normal((gd, G * B, B)).astype(np.float32)
+    brow = rng.integers(0, mb, (gd, G)).astype(np.int32)
+    xg = rng.standard_normal((gd, G, B)).astype(np.float32)
+    part = cb_block_dense.block_dense_spmv_batched(
+        jnp.asarray(tiles), jnp.asarray(xg), interpret=True
     )
+    assert part.shape == (gd, G, B)
     y = np.zeros((mb, B), np.float32)
-    np.add.at(y, brow, np.asarray(part))
-    xg = xb[bcol]
-    expected = ref.block_dense_spmv(jnp.asarray(tiles), jnp.asarray(brow),
-                                    jnp.asarray(xg), mb)
+    np.add.at(y, brow.reshape(-1), np.asarray(part).reshape(-1, B))
+    expected = ref.block_dense_spmv(
+        jnp.asarray(tiles.reshape(gd * G, B, B)),
+        jnp.asarray(brow.reshape(-1)),
+        jnp.asarray(xg.reshape(gd * G, B)), mb,
+    )
     np.testing.assert_allclose(y, np.asarray(expected), rtol=1e-4, atol=1e-4)
 
 
 def test_coo_kernel_packs_paper_layout():
     """Alg. 3 bit layout: the kernel must decode col<<bits|row."""
     B = 16
-    codes = np.array([[ (3 << 4) | 5, (0 << 4) | 0, 0 ]], np.int32)
-    vals = np.array([[2.0, 4.0, 0.0]], np.float32)   # third is padding
-    xg = np.array([[10.0, 100.0, 0.0]], np.float32)
-    out = cb_coo.coo_spmv_gathered(
+    codes = np.zeros((1, 8), np.int32)
+    codes[0, :2] = [(3 << 4) | 5, (0 << 4) | 0]
+    vals = np.zeros((1, 8), np.float32)
+    vals[0, :2] = [2.0, 4.0]                      # lanes 2.. are padding
+    xg = np.zeros((1, 8), np.float32)
+    xg[0, :2] = [10.0, 100.0]
+    out = cb_coo.coo_spmv_batched(
         jnp.asarray(codes), jnp.asarray(vals), jnp.asarray(xg),
         block_size=B, interpret=True,
     )
-    out = np.asarray(out)[0]
+    out = np.asarray(out)[0, 0]
     assert out[5] == pytest.approx(20.0)   # row 5 <- 2*10
     assert out[0] == pytest.approx(400.0)  # row 0 <- 4*100
     assert np.count_nonzero(out) == 2      # padding contributed nothing
 
 
+def test_coo_kernel_slots_split_at_sublane_boundaries():
+    """Lanes route to the output tile of lane // SUBLANE, not a neighbour."""
+    B = 8
+    codes = np.zeros((1, 16), np.int32)
+    codes[0, 0] = (2 << 3) | 1     # lane 0 -> slot 0, row 1
+    codes[0, 8] = (4 << 3) | 1     # lane 8 -> slot 1, row 1
+    vals = np.zeros((1, 16), np.float32)
+    vals[0, 0], vals[0, 8] = 3.0, 7.0
+    xg = np.ones((1, 16), np.float32)
+    out = np.asarray(cb_coo.coo_spmv_batched(
+        jnp.asarray(codes), jnp.asarray(vals), jnp.asarray(xg),
+        block_size=B, interpret=True,
+    ))[0]
+    assert out.shape == (2, B)
+    assert out[0, 1] == pytest.approx(3.0)
+    assert out[1, 1] == pytest.approx(7.0)
+    assert np.count_nonzero(out) == 2
+
+
 @pytest.mark.parametrize("K", [8, 16, 24])
 def test_panel_kernel_shapes(K):
     rng = np.random.default_rng(2)
-    np_, B = 5, 16
-    panels = rng.standard_normal((np_, B, K)).astype(np.float32)
-    xg = rng.standard_normal((np_, K)).astype(np.float32)
-    got = cb_colagg.panel_spmv(jnp.asarray(panels), jnp.asarray(xg),
-                               interpret=True)
+    gp, B = 5, 16
+    panels = rng.standard_normal((gp, B, K)).astype(np.float32)
+    xg = rng.standard_normal((gp, K)).astype(np.float32)
+    got = cb_colagg.panel_spmv_batched(
+        jnp.asarray(panels), jnp.asarray(xg), interpret=True,
+    )
+    # slot s sums lanes [8s, 8s+8); summing slots recovers the panel dot
+    assert got.shape == (gp, K // 8, B)
     expected = np.einsum("bik,bk->bi", panels, xg)
-    np.testing.assert_allclose(np.asarray(got), expected, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=1), expected,
+                               rtol=1e-4, atol=1e-4)
+    slot0 = np.einsum("bik,bk->bi", panels[:, :, :8], xg[:, :8])
+    np.testing.assert_allclose(np.asarray(got)[:, 0], slot0,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_panel_kernel_lane_packing():
+    """Two panels fused into one slab must match the two separate dots."""
+    rng = np.random.default_rng(5)
+    B, k0, k1 = 8, 8, 16
+    p0 = rng.standard_normal((B, k0)).astype(np.float32)
+    p1 = rng.standard_normal((B, k1)).astype(np.float32)
+    slab = np.concatenate([p0, p1], axis=1)[None]           # (1, B, 24)
+    xg = rng.standard_normal((1, k0 + k1)).astype(np.float32)
+    got = np.asarray(cb_colagg.panel_spmv_batched(
+        jnp.asarray(slab), jnp.asarray(xg), interpret=True,
+    ))[0]
+    # p0 owns slot 0; p1 owns slots 1+2 (its partials sum to the full dot)
+    np.testing.assert_allclose(got[0], p0 @ xg[0, :k0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[1] + got[2], p1 @ xg[0, k0:],
+                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
