@@ -36,13 +36,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
     ap.add_argument("--only", default=None,
-                    help="comma list: fig9,fig10,fig11,fig12,fig34,spmv_batch")
+                    help="comma list: fig9,fig10,fig11,fig12,fig34,"
+                         "spmv_batch,solvers")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write executed sections' rows to PATH as JSON")
     args = ap.parse_args()
 
     from . import fig9_perf, fig10_locality, fig11_ablation, fig12_overhead
-    from . import fig34_distribution, spmv_batch
+    from . import fig34_distribution, solvers, spmv_batch
 
     sections = {
         "fig9": ("Fig. 9 — SpMV perf vs CSR/COO/BSR", fig9_perf.main),
@@ -52,6 +53,8 @@ def main() -> None:
         "fig34": ("Fig. 3/4 — distribution + balance", fig34_distribution.main),
         "spmv_batch": ("Batched super-block engine vs unbatched",
                        spmv_batch.main),
+        "solvers": ("Iterative solvers vs scipy.sparse CPU reference",
+                    solvers.main),
     }
     chosen = args.only.split(",") if args.only else list(sections)
     results: dict[str, object] = {}

@@ -5,17 +5,22 @@
 
 Two checks, both cheap enough for every CI run:
 
-  * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output and
-    every ``spmv_batch`` row carries its required, finite metrics;
+  * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output,
+    every ``spmv_batch``/``solvers`` row carries its required, finite
+    metrics, and every solver row converged;
   * **regression** — deterministic metrics (``padded_*``, ``steps_*``)
     are compared row by row against the baseline (a 2x jump is always a
     genuine packing bug). Timings are guarded as the **batched /
     unbatched ratio**, geomean'd across matched rows, compared against
     the same ratio in the baseline — machine speed cancels out, so the
     checked-in baseline stays valid on any box; a 2x relative drift
-    means batching itself got slower, not the machine. Absolute wall
-    times are never compared across machines. (Real perf gating needs
-    TPU hardware — see ROADMAP.)
+    means batching itself got slower, not the machine. The ``solvers``
+    section is guarded through its ``t_per_iter / t_ref_per_iter``
+    ratio (jit solver vs scipy on the same box) — raw machine speed
+    cancels, though the JAX-dispatch-vs-scipy overhead balance can
+    still shift across toolchain upgrades, so regenerate the baseline
+    when bumping either. Absolute wall times are never compared across
+    machines. (Real perf gating needs TPU hardware — see ROADMAP.)
 
 Exit status: 0 clean, 1 on any violation (messages on stderr).
 """
@@ -31,11 +36,20 @@ REQUIRED_SPMV_BATCH_KEYS = (
     "padded_ratio_unbatched", "padded_ratio_batched",
     "t_unbatched", "t_batched",
 )
-ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_")
+REQUIRED_SOLVER_KEYS = (
+    "matrix", "solver", "n", "nnz", "iters_to_tol", "iters_ref",
+    "converged", "t_per_iter", "t_ref_per_iter",
+)
+REQUIRED_KEYS_PER_SECTION = {
+    "spmv_batch": REQUIRED_SPMV_BATCH_KEYS,
+    "solvers": REQUIRED_SOLVER_KEYS,
+}
+ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_", "iters_")
 # (numerator, denominator): the machine-independent relative timing signals
 TIMING_PAIRS = (
     ("t_batched", "t_unbatched"),
     ("t_ref_batched", "t_ref_unbatched"),
+    ("t_per_iter", "t_ref_per_iter"),
 )
 MAX_RATIO = 2.0
 
@@ -59,25 +73,32 @@ def load(path: str) -> dict:
 
 
 def check_schema(data: dict, path: str) -> None:
-    rows = data["sections"].get("spmv_batch")
-    if rows is None:
-        return
-    if not isinstance(rows, list) or not rows:
-        fail(f"{path}: spmv_batch section is empty")
-    for i, row in enumerate(rows):
-        for key in REQUIRED_SPMV_BATCH_KEYS:
-            if key not in row:
-                fail(f"{path}: spmv_batch[{i}] missing '{key}'")
-            val = row[key]
-            if isinstance(val, (int, float)) and not math.isfinite(val):
-                fail(f"{path}: spmv_batch[{i}]['{key}'] is not finite")
+    for section, required in REQUIRED_KEYS_PER_SECTION.items():
+        rows = data["sections"].get(section)
+        if rows is None:
+            continue
+        if not isinstance(rows, list) or not rows:
+            fail(f"{path}: {section} section is empty")
+        for i, row in enumerate(rows):
+            for key in required:
+                if key not in row:
+                    fail(f"{path}: {section}[{i}] missing '{key}'")
+                val = row[key]
+                if isinstance(val, (int, float)) and not math.isfinite(val):
+                    fail(f"{path}: {section}[{i}]['{key}'] is not finite")
+            if section == "solvers" and row.get("converged") is not True:
+                fail(f"{path}: solvers[{i}] "
+                     f"({row.get('matrix')}/{row.get('solver')}) "
+                     f"did not converge")
 
 
 def index_rows(rows) -> dict:
+    """Rows keyed by matrix name (+ solver, for sections with several
+    solvers per matrix)."""
     if not isinstance(rows, list):
         return {}
-    return {r["matrix"]: r for r in rows
-            if isinstance(r, dict) and "matrix" in r}
+    return {f"{r['matrix']}/{r['solver']}" if "solver" in r else r["matrix"]: r
+            for r in rows if isinstance(r, dict) and "matrix" in r}
 
 
 def check_regressions(new: dict, base: dict) -> list[str]:

@@ -129,26 +129,51 @@ def distributed_spmv(
     *,
     impl: str = "pallas",
     interpret: bool | None = None,
+    combine: str = "psum_scatter",
 ) -> jax.Array:
-    """y = A @ x with A's blocks pq-balanced over ``axis``; x replicated."""
+    """y = A @ x with A's blocks pq-balanced over ``axis``; x replicated.
+
+    ``combine`` picks the partial-y reduction:
+
+      * ``"psum_scatter"`` (default) — each device keeps only its y shard
+        after the reduce-scatter, so the combine moves ``m`` elements per
+        device instead of ``D * m`` and the output stays sharded over
+        ``axis`` (the ROADMAP scale-out item). The returned global array
+        is sliced back to length ``m``.
+      * ``"psum"`` — the legacy fully-replicated combine, kept for the
+        multi-pod dry-run whose CPU stand-in lowering only exercises the
+        all-reduce collective.
+    """
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
     from repro.kernels import ops
 
+    if combine not in ("psum", "psum_scatter"):
+        raise ValueError(f"unknown combine {combine!r}")
     dev_spec = jax.tree_util.tree_map(lambda _: P(axis), sharded.streams)
+    m = sharded.streams.m
+    D = sharded.num_devices
+    m_pad = -(-m // D) * D  # reduce-scatter needs an axis divisible by D
 
     @partial(
         compat.shard_map,
         mesh=mesh,
         in_specs=(dev_spec, P()),
-        out_specs=P(),
+        out_specs=P() if combine == "psum" else P(axis),
         # pallas_call out_shapes carry no varying-mesh-axes info
         check_vma=False,
     )
     def run(streams_shard, x_rep):
         local = jax.tree_util.tree_map(lambda a: a[0], streams_shard)
         y = ops.cb_spmv(local, x_rep, impl=impl, interpret=interpret)
-        return jax.lax.psum(y, axis)
+        if combine == "psum":
+            return jax.lax.psum(y, axis)
+        y_pad = jnp.pad(y, (0, m_pad - y.shape[0]))
+        return jax.lax.psum_scatter(y_pad, axis, scatter_dimension=0,
+                                    tiled=True)
 
-    return run(sharded.streams, x)
+    y = run(sharded.streams, x)
+    if combine == "psum" or m == m_pad:
+        return y  # still sharded over ``axis`` in the scatter case
+    return y[:m]  # ragged tail: the slice re-gathers the last shard

@@ -483,6 +483,57 @@ def build_super_streams(
 
 
 # ---------------------------------------------------------------------------
+# Transposed streams: the solver subsystem's rmatvec path.
+# ---------------------------------------------------------------------------
+
+def transpose_cb(cb: CBMatrix) -> CBMatrix:
+    """Rebuild the full CB pipeline for ``A^T`` (host-side, plan time).
+
+    Krylov methods on nonsymmetric systems (BiCGStab's shadow residual,
+    least-squares solves) need ``A^T @ y`` with the same amortized-
+    preprocessing story as ``A @ x``. Rather than bolt a transposed
+    execution mode onto the kernels (which would double every kernel's
+    surface), the transpose gets its *own* CB structure: collect the
+    matrix's triplets in original global coordinates, swap them, and run
+    the whole preprocessing pipeline again. Block formats, column
+    aggregation and balance are re-decided for A^T's structure — the
+    transpose of a panel-heavy matrix may well be COO-heavy.
+
+    Triplets are gathered in canonical row-major order of the transpose
+    so the result is bit-identical to building ``CBMatrix.from_coo`` on
+    the transposed triplets directly (determinism contract relied on by
+    the solver tests).
+    """
+    B = cb.block_size
+    m, n = cb.shape
+    rs, cs, vs = [], [], []
+    for brow, bcol, _fmt, r, c, v in cb.iter_blocks():
+        gc = cb.global_x_index(brow, bcol, c)
+        rs.append(brow * B + r.astype(np.int64))
+        cs.append(gc.astype(np.int64))
+        vs.append(v)
+    if rs:
+        r_all = np.concatenate(rs)
+        c_all = np.concatenate(cs)
+        v_all = np.concatenate(vs)
+    else:
+        r_all = c_all = np.zeros(0, np.int64)
+        v_all = np.zeros(0, cb.val_dtype)
+    order = np.lexsort((r_all, c_all))  # row-major in transposed coords
+    return CBMatrix.from_coo(
+        c_all[order], r_all[order], v_all[order], (n, m),
+        block_size=B, val_dtype=cb.val_dtype, thresholds=cb.thresholds,
+    )
+
+
+def build_transposed_super_streams(
+    cb: CBMatrix, group_size: int | None = None
+) -> SuperBlockStreams:
+    """Batched super-block streams for ``A^T`` (see :func:`transpose_cb`)."""
+    return build_super_streams(transpose_cb(cb), group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
 # SpMM tile stream: block-dense weights for the training/prefill path.
 # ---------------------------------------------------------------------------
 

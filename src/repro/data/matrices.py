@@ -122,6 +122,123 @@ def pruned_weight(m, n, block_size=16, block_sparsity=0.85, seed=0):
     return _dedup(rows, cols, m, n, rng)
 
 
+def spd_banded(m, n=None, bandwidth=9, fill=0.7, seed=0):
+    """Symmetric positive-definite banded/FEM matrix (the solver corpus).
+
+    Symmetrizes a :func:`banded` draw (``(A + A^T) / 2``) and then shifts
+    the diagonal to ``sum_j |a_ij| + 1`` — strict diagonal dominance with
+    a positive diagonal, hence SPD by Gershgorin, with a modest condition
+    number so Krylov iteration counts are stable across dtypes. Always
+    square: ``d = min(m, n)`` when ``n`` is given.
+    """
+    d = m if n is None else min(m, n)
+    r, c, v = banded(d, d, bandwidth=bandwidth, fill=fill, seed=seed)
+    off = r != c
+    r2 = np.concatenate([r[off], c[off]])
+    c2 = np.concatenate([c[off], r[off]])
+    v2 = np.concatenate([v[off], v[off]]) * 0.5
+    key = r2 * d + c2
+    uk, inv = np.unique(key, return_inverse=True)
+    vs = np.zeros(len(uk))
+    np.add.at(vs, inv, v2)
+    rr, cc = uk // d, uk % d
+    rowsum = np.zeros(d)
+    np.add.at(rowsum, rr, np.abs(vs))
+    rows = np.concatenate([rr, np.arange(d)])
+    cols = np.concatenate([cc, np.arange(d)])
+    vals = np.concatenate([vs, rowsum + 1.0])
+    return rows.astype(np.int64), cols.astype(np.int64), vals
+
+
+def spd_corpus(scale: str = "small", seed: int = 0):
+    """SPD matrices for the solver benchmarks/tests (same tuple layout as
+    :func:`corpus`)."""
+    if scale == "small":
+        dims = [192, 320]
+    elif scale == "bench":
+        dims = [4096, 8192]
+    else:
+        raise ValueError(scale)
+    out = []
+    for i, d in enumerate(dims):
+        r, c, v = spd_banded(d, bandwidth=9 + 2 * i, seed=seed + i)
+        out.append(
+            (MatrixSpec(f"spd_banded_{d}", "spd", d, d), r, c, v, (d, d))
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MatrixMarket ingestion — real SuiteSparse matrices alongside the
+# synthetic corpus.
+# ---------------------------------------------------------------------------
+
+_MM_FIELDS = {"real", "integer", "pattern"}
+_MM_SYMMETRIES = {"general", "symmetric", "skew-symmetric"}
+
+
+def load_matrix_market(path):
+    """Parse a MatrixMarket ``.mtx`` file into ``(rows, cols, vals, shape)``.
+
+    Supports the ``matrix coordinate`` object/format with ``real`` /
+    ``integer`` / ``pattern`` fields (pattern entries get unit values) and
+    ``general`` / ``symmetric`` / ``skew-symmetric`` storage — symmetric
+    variants are expanded to the full element set (off-diagonal entries
+    mirrored; negated for skew). Indices come back 0-based int64, values
+    float64 — ready for ``CBMatrix.from_coo``. ``complex`` fields and
+    ``array`` (dense) format raise ``ValueError``.
+    """
+    with open(path) as f:
+        header = f.readline().split()
+        if len(header) != 5 or header[0] != "%%MatrixMarket":
+            raise ValueError(f"{path}: not a MatrixMarket file")
+        obj, fmt, field, symmetry = (tok.lower() for tok in header[1:])
+        if obj != "matrix" or fmt != "coordinate":
+            raise ValueError(
+                f"{path}: only 'matrix coordinate' supported, "
+                f"got '{obj} {fmt}'"
+            )
+        if field not in _MM_FIELDS:
+            raise ValueError(f"{path}: unsupported field '{field}'")
+        if symmetry not in _MM_SYMMETRIES:
+            raise ValueError(f"{path}: unsupported symmetry '{symmetry}'")
+        line = f.readline()
+        while line and line.lstrip().startswith("%"):
+            line = f.readline()
+        dims = line.split()
+        if len(dims) != 3:
+            raise ValueError(f"{path}: malformed size line {line!r}")
+        m, n, nnz = (int(t) for t in dims)
+        data = np.loadtxt(f, ndmin=2, dtype=np.float64)
+    if data.size == 0:
+        data = np.zeros((0, 2 if field == "pattern" else 3))
+    if len(data) != nnz:
+        raise ValueError(
+            f"{path}: header promises {nnz} entries, found {len(data)}"
+        )
+    rows = data[:, 0].astype(np.int64) - 1
+    cols = data[:, 1].astype(np.int64) - 1
+    if field == "pattern":
+        vals = np.ones(len(rows), np.float64)
+    else:
+        if data.shape[1] < 3:
+            raise ValueError(f"{path}: '{field}' entries need a value column")
+        vals = data[:, 2]
+    if rows.size and (
+        rows.min() < 0 or rows.max() >= m or cols.min() < 0 or cols.max() >= n
+    ):
+        raise ValueError(f"{path}: coordinate out of bounds for {m}x{n}")
+    if symmetry != "general":
+        off = rows != cols
+        sign = -1.0 if symmetry == "skew-symmetric" else 1.0
+        rows, cols, vals = (
+            np.concatenate([rows, cols[off]]),
+            np.concatenate([cols, rows[off]]),
+            np.concatenate([vals, sign * vals[off]]),
+        )
+    return rows, cols, vals, (m, n)
+
+
 FAMILIES = {
     "uniform": uniform_random,
     "power_law": power_law,

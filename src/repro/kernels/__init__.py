@@ -1,3 +1,3 @@
 """Pallas TPU kernels for CB-SpMV / CB-SpMM (+ jnp oracles in ref.py)."""
 from . import ref  # noqa: F401
-from .ops import cb_spmm, cb_spmv  # noqa: F401
+from .ops import cb_spmm, cb_spmv, cb_spmv_into  # noqa: F401

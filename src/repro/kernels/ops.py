@@ -150,14 +150,7 @@ def cb_spmv(
     stream layout as given (no regrouping), so batched Pallas results are
     always checked against math that never touched the batching code.
     """
-    if group_size is not None and group_size < 1:
-        raise ValueError(f"group_size must be >= 1, got {group_size}")
-    if isinstance(streams, SuperBlockStreams):
-        if group_size is not None and group_size != streams.group_size:
-            raise ValueError(
-                f"stream was packed with group_size={streams.group_size}; "
-                f"cannot re-batch to {group_size} post hoc"
-            )
+    _check_group_size(streams, group_size)
 
     if impl == "reference":
         if isinstance(streams, SuperBlockStreams):
@@ -170,14 +163,70 @@ def cb_spmv(
     interp = (not _on_tpu()) if interpret is None else interpret
 
     B, mb = sup.block_size, sup.mb
+    y = _combine_into(jnp.zeros((mb, B), jnp.float32), sup, x, interp)
+    return y.reshape(-1)[: sup.m]
+
+
+def _check_group_size(streams, group_size) -> None:
+    """Shared argument contract of ``cb_spmv`` / ``cb_spmv_into``."""
+    if group_size is not None and group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    if isinstance(streams, SuperBlockStreams):
+        if group_size is not None and group_size != streams.group_size:
+            raise ValueError(
+                f"stream was packed with group_size={streams.group_size}; "
+                f"cannot re-batch to {group_size} post hoc"
+            )
+
+
+def _combine_into(y2d, sup: SuperBlockStreams, x: jax.Array, interp: bool):
+    """Scatter every format's partials into the (mb, B) accumulator."""
     parts = _super_partials_pallas(sup, x, interp)
-    y = jnp.zeros((mb, B), jnp.float32)
     if parts:
         # ONE fused scatter-add over every format's per-slot partials.
         all_parts = jnp.concatenate([p for p, _ in parts], axis=0)
         all_brow = jnp.concatenate([b for _, b in parts], axis=0)
-        y = y.at[all_brow].add(all_parts)
-    return y.reshape(-1)[: sup.m]
+        y2d = y2d.at[all_brow].add(all_parts)
+    return y2d
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("impl", "interpret", "group_size"),
+    donate_argnums=(0,),
+)
+def cb_spmv_into(
+    y_acc: jax.Array,
+    streams: SpMVStreams | SuperBlockStreams,
+    x: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    group_size: int | None = None,
+) -> jax.Array:
+    """``y_acc + A @ x`` with the ``(m,)`` accumulator **donated**.
+
+    The iterative-solver pattern: the same ``y`` buffer is reused across
+    thousands of matvecs, so the accumulator is donated (``donate_argnums``)
+    and XLA aliases the output onto the caller's buffer instead of
+    allocating a fresh one per iteration (a no-op where the backend lacks
+    donation, e.g. CPU — then this is just fused accumulate-SpMV). The
+    caller must not reuse ``y_acc`` after the call, per donation rules.
+    """
+    _check_group_size(streams, group_size)
+    if impl == "reference":
+        return y_acc + cb_spmv(streams, x, impl="reference")
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    sup = (streams if isinstance(streams, SuperBlockStreams)
+           else _regroup(streams, group_size or 1))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, mb = sup.block_size, sup.mb
+    y2d = jnp.pad(
+        y_acc.astype(jnp.float32), (0, mb * B - y_acc.shape[0])
+    ).reshape(mb, B)
+    y2d = _combine_into(y2d, sup, x, interp)
+    return y2d.reshape(-1)[: sup.m]
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_n"))

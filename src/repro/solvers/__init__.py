@@ -1,0 +1,24 @@
+"""Iterative solver subsystem on the batched CB-SpMV engine.
+
+``CBLinearOperator`` amortizes all CB preprocessing (blocking, format
+selection, column aggregation, balance, super-block packing, transposed
+streams, SpMM tiles) into one plan-time build; the Krylov and spectral
+drivers then apply it inside single-trace ``lax.while_loop``s. See
+``solvers/README.md`` for the static-metadata/while-loop contract.
+"""
+from .operator import CBLinearOperator  # noqa: F401
+from .krylov import SolveResult, bicgstab, cg, gmres  # noqa: F401
+from .precond import (  # noqa: F401
+    BlockJacobiPreconditioner,
+    IdentityPreconditioner,
+    JacobiPreconditioner,
+    block_jacobi,
+    jacobi,
+)
+from .eigen import (  # noqa: F401
+    EigenResult,
+    chebyshev_subspace,
+    pagerank,
+    pagerank_operator,
+    power_iteration,
+)

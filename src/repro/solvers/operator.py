@@ -1,0 +1,136 @@
+"""CBLinearOperator — the solver subsystem's view of a CB matrix.
+
+Iterative solvers apply the same matrix thousands of times; the whole
+point of CB preprocessing (paper §3, fig. 12) is that its cost amortizes
+to zero in exactly this regime. The operator therefore does ALL
+preprocessing once at construction time (``from_cb``) and exposes only
+jit-native applications afterwards:
+
+  * ``matvec``  — ``A @ x``  through the batched super-block engine
+    (``build_super_streams``; ``group_size`` baked into the stream);
+  * ``rmatvec`` — ``A^T @ y`` through a *precomputed transposed* super
+    stream (``streams.transpose_cb``): the transpose gets its own CB
+    structure with formats/colagg/balance re-decided for A^T's sparsity;
+  * ``matmat``  — multi-RHS ``A @ X`` through the block-dense CB-SpMM
+    tile stream (subspace eigensolvers, blocked Krylov).
+
+Trace-time-constant discipline (same contract as ``sparse/linear.py``):
+the operator is a registered pytree whose array leaves are the stream
+payloads and whose *shape metadata is static*. Solvers take the operator
+as an ordinary jit argument — one trace per (structure, shape) and pure
+data-path re-execution for every new value of the payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cb_matrix import CBMatrix
+from repro.core.streams import (
+    SuperBlockStreams,
+    TileStream,
+    build_super_streams,
+    build_transposed_super_streams,
+    tile_stream_from_cb,
+)
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class CBLinearOperator:
+    """Preprocessed CB matrix as a (pytree) linear operator.
+
+    ``streams_T`` / ``tiles`` are optional capabilities: ``None`` when the
+    caller asked ``from_cb`` not to pay their preprocessing (pytrees treat
+    ``None`` as an empty subtree, so the operator stays jit-compatible
+    either way).
+    """
+
+    # -- static ----------------------------------------------------------
+    shape: tuple[int, int]
+    block_size: int
+    nnz: int
+    # -- data leaves -----------------------------------------------------
+    streams: SuperBlockStreams
+    streams_T: SuperBlockStreams | None = None
+    tiles: TileStream | None = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_cb(
+        cls,
+        cb: CBMatrix,
+        *,
+        group_size: int | None = None,
+        with_rmatvec: bool = False,
+        with_matmat: bool = False,
+    ) -> "CBLinearOperator":
+        """Build every requested stream once (host-side, plan time).
+
+        Capabilities are pay-for-what-you-ask: ``rmatvec`` costs a full
+        second CB pipeline on the transposed triplets and ``matmat``
+        densifies every block into SpMM tiles, so both default OFF — a
+        plain CG/power-iteration operator should not triple its plan
+        time (and skew the amortization story) for paths it never runs.
+        """
+        return cls(
+            shape=tuple(cb.shape),
+            block_size=cb.block_size,
+            nnz=cb.nnz,
+            streams=build_super_streams(cb, group_size=group_size),
+            streams_T=(build_transposed_super_streams(cb, group_size=group_size)
+                       if with_rmatvec else None),
+            tiles=tile_stream_from_cb(cb) if with_matmat else None,
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def group_size(self) -> int:
+        return self.streams.group_size
+
+    @property
+    def dtype(self):
+        return jnp.float32  # the kernels' accumulate/output dtype
+
+    def matvec(self, x: jax.Array, *, impl: str = "pallas",
+               interpret: bool | None = None) -> jax.Array:
+        """``A @ x`` — x: (n,) -> (m,)."""
+        return ops.cb_spmv(self.streams, x, impl=impl, interpret=interpret)
+
+    def matvec_into(self, y_acc: jax.Array, x: jax.Array, *,
+                    impl: str = "pallas",
+                    interpret: bool | None = None) -> jax.Array:
+        """``y_acc + A @ x`` with the accumulator donated (ops.cb_spmv_into)."""
+        return ops.cb_spmv_into(y_acc, self.streams, x, impl=impl,
+                                interpret=interpret)
+
+    def rmatvec(self, y: jax.Array, *, impl: str = "pallas",
+                interpret: bool | None = None) -> jax.Array:
+        """``A^T @ y`` — y: (m,) -> (n,) via the precomputed transpose."""
+        if self.streams_T is None:
+            raise ValueError(
+                "operator was built with with_rmatvec=False; rebuild with "
+                "CBLinearOperator.from_cb(cb, with_rmatvec=True)"
+            )
+        return ops.cb_spmv(self.streams_T, y, impl=impl, interpret=interpret)
+
+    def matmat(self, X: jax.Array, *, impl: str = "pallas",
+               interpret: bool | None = None,
+               block_n: int = 128) -> jax.Array:
+        """``A @ X`` — X: (n, N) -> (m, N) via the CB-SpMM tile stream."""
+        if self.tiles is None:
+            raise ValueError(
+                "operator was built with with_matmat=False; rebuild with "
+                "CBLinearOperator.from_cb(cb, with_matmat=True)"
+            )
+        return ops.cb_spmm(self.tiles, X, impl=impl, interpret=interpret,
+                           block_n=block_n)
+
+
+jax.tree_util.register_dataclass(
+    CBLinearOperator,
+    data_fields=["streams", "streams_T", "tiles"],
+    meta_fields=["shape", "block_size", "nnz"],
+)

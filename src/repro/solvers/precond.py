@@ -1,0 +1,126 @@
+"""Preconditioners extracted from the CB block structure (plan time).
+
+The CB format already materializes the diagonal sub-blocks as tiles —
+block-Jacobi preconditioning is therefore free structure reuse: walk the
+blocks once at plan time, gather every entry whose *global* column lands
+inside its own block-row's diagonal window, and invert the resulting
+(B, B) diagonal blocks with numpy. The apply path is a single batched
+(mb, B, B) x (mb, B) contraction — one fused einsum per iteration, no
+gather/scatter, jit-native.
+
+Rows whose diagonal block row is entirely zero get an identity row so the
+block stays invertible (any nonsingular M is a valid preconditioner; for
+those rows M acts as the identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cb_matrix import CBMatrix
+
+
+@dataclasses.dataclass
+class IdentityPreconditioner:
+    """M = I — the no-preconditioning baseline (still a pytree)."""
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        return r
+
+
+@dataclasses.dataclass
+class JacobiPreconditioner:
+    """M^-1 = diag(A)^-1 (point Jacobi)."""
+
+    inv_diag: jax.Array  # (m,)
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        return self.inv_diag * r
+
+
+@dataclasses.dataclass
+class BlockJacobiPreconditioner:
+    """M^-1 = blockdiag(A)^-1 at the CB block size."""
+
+    # -- static ----------------------------------------------------------
+    m: int
+    block_size: int
+    # -- data -------------------------------------------------------------
+    inv_blocks: jax.Array  # (mb, B, B)
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        B = self.block_size
+        mb = self.inv_blocks.shape[0]
+        rp = jnp.pad(r, (0, mb * B - r.shape[0])).reshape(mb, B)
+        y = jnp.einsum(
+            "brc,bc->br", self.inv_blocks.astype(rp.dtype), rp
+        )
+        return y.reshape(-1)[: self.m]
+
+
+jax.tree_util.register_dataclass(
+    IdentityPreconditioner, data_fields=[], meta_fields=[]
+)
+jax.tree_util.register_dataclass(
+    JacobiPreconditioner, data_fields=["inv_diag"], meta_fields=[]
+)
+jax.tree_util.register_dataclass(
+    BlockJacobiPreconditioner,
+    data_fields=["inv_blocks"],
+    meta_fields=["m", "block_size"],
+)
+
+
+def _diag_blocks(cb: CBMatrix) -> np.ndarray:
+    """Accumulate the (mb, B, B) block-diagonal of A from the CB blocks.
+
+    Works in *global* column coordinates (via ``global_x_index``) so the
+    extraction is correct whether or not column aggregation moved the
+    diagonal entries into different compacted block columns.
+    """
+    B = cb.block_size
+    m = cb.shape[0]
+    mb = -(-m // B)
+    D = np.zeros((mb, B, B), np.float64)
+    for brow, bcol, _fmt, r, c, v in cb.iter_blocks():
+        gc = cb.global_x_index(brow, bcol, c)
+        lo = brow * B
+        sel = (gc >= lo) & (gc < lo + B)
+        if not np.any(sel):
+            continue
+        np.add.at(
+            D,
+            (np.full(int(sel.sum()), brow), r[sel], (gc[sel] - lo)),
+            v[sel].astype(np.float64),
+        )
+    return D
+
+
+def jacobi(cb: CBMatrix) -> JacobiPreconditioner:
+    """Point-Jacobi from the CB diagonal (zero diagonals act as identity)."""
+    m = cb.shape[0]
+    diag = np.einsum("bii->bi", _diag_blocks(cb)).reshape(-1)[:m]
+    inv = np.where(diag != 0.0, 1.0 / np.where(diag != 0.0, diag, 1.0), 1.0)
+    return JacobiPreconditioner(inv_diag=jnp.asarray(inv, jnp.float32))
+
+
+def block_jacobi(cb: CBMatrix) -> BlockJacobiPreconditioner:
+    """Block-Jacobi from the materialized CB diagonal tiles."""
+    B = cb.block_size
+    m = cb.shape[0]
+    D = _diag_blocks(cb)
+    # Identity rows where the block row is entirely zero (incl. the ragged
+    # padding rows of the last block) keep every block invertible.
+    dead = ~np.any(D != 0.0, axis=2)  # (mb, B)
+    bidx, ridx = np.nonzero(dead)
+    D[bidx, ridx, ridx] = 1.0
+    try:
+        inv = np.linalg.inv(D)
+    except np.linalg.LinAlgError:
+        inv = np.stack([np.linalg.pinv(blk) for blk in D])
+    return BlockJacobiPreconditioner(
+        m=m, block_size=B, inv_blocks=jnp.asarray(inv, jnp.float32)
+    )

@@ -15,7 +15,9 @@ Structures beyond the synthetic corpus families:
   * ``empty_rows_cols``  — bands of fully-empty rows AND columns (empty
     block-row panels; compacted widths of zero under colagg);
   * ``single_element``   — one nnz in a ragged corner block;
-  * ``ragged_tail``      — dense-ish band on a shape not divisible by B.
+  * ``ragged_tail``      — dense-ish band on a shape not divisible by B;
+  * ``spd``              — symmetrized banded + diagonal shift (the
+    solver subsystem's SPD regime).
 
 Matrices are kept small (~150 rows) so the whole grid runs in interpret
 mode in seconds per case.
@@ -109,6 +111,13 @@ def _bucket_widths(seed=0):
     return rows.astype(np.int64), cols.astype(np.int64), vals, (m, n)
 
 
+def _spd(seed=0):
+    """Symmetrized banded/FEM matrix with a diagonal-dominance shift —
+    the SPD regime the Krylov solver subsystem runs on (CG assumes it)."""
+    r, c, v = matrices.spd_banded(144, bandwidth=9, fill=0.75, seed=seed)
+    return r, c, v, (144, 144)
+
+
 STRUCTURES = {
     "uniform": _uniform,
     "power_law": _power_law,
@@ -118,6 +127,7 @@ STRUCTURES = {
     "single_element": _single_element,
     "ragged_tail": _ragged_tail,
     "bucket_widths": _bucket_widths,
+    "spd": _spd,
 }
 
 

@@ -49,6 +49,42 @@ print("OK")
 """)
 
 
+def test_distributed_spmv_combine_modes():
+    """psum_scatter (sharded y) and legacy psum agree with the oracle; an
+    axis-divisible m keeps the scatter output sharded end to end."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core.cb_matrix import CBMatrix
+from repro.core import distributed as dist
+from repro.core.spmv_ref import dense_oracle
+from repro.data import matrices
+
+mesh = compat.make_mesh((4,), ("model",))
+for m, n in ((160, 160), (150, 144)):  # divisible / ragged over D=4
+    r, c, v = matrices.power_law(m, n, seed=7)
+    cb = CBMatrix.from_coo(r, c, v, (m, n), block_size=16, val_dtype=np.float32)
+    sh = dist.shard_streams(cb, 4)
+    x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    y0 = dense_oracle(r, c, v.astype(np.float32), (m, n), x)
+    for combine in ("psum", "psum_scatter"):
+        y = dist.distributed_spmv(sh, jnp.asarray(x), mesh, impl="reference",
+                                  combine=combine)
+        assert y.shape == (m,), (combine, y.shape)
+        np.testing.assert_allclose(np.asarray(y), y0, rtol=3e-4, atol=3e-4)
+        if combine == "psum_scatter" and m % 4 == 0:
+            assert y.sharding.spec == P("model"), y.sharding
+try:
+    dist.distributed_spmv(sh, jnp.asarray(x), mesh, combine="bogus")
+except ValueError:
+    pass
+else:
+    raise AssertionError("bogus combine accepted")
+print("OK")
+""")
+
+
 def test_sharded_train_step_matches_single_device():
     _run("""
 import numpy as np, jax, jax.numpy as jnp

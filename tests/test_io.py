@@ -1,0 +1,191 @@
+"""Persistence + ingestion: MatrixMarket parsing and CBMatrix save/load."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cb_matrix import CBMatrix
+from repro.core.streams import build_streams, build_super_streams
+from repro.core.spmv_ref import dense_oracle
+from repro.data import matrices
+from repro.data.matrices import load_matrix_market
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# MatrixMarket
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, text):
+    p = tmp_path / "m.mtx"
+    p.write_text(text)
+    return p
+
+
+def test_mm_general_real(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate real general
+% a comment line
+2 4 3
+1 1 1.0
+2 3 -2.5
+1 4 0.5
+""")
+    rows, cols, vals, shape = load_matrix_market(p)
+    assert shape == (2, 4)
+    A = np.zeros(shape)
+    A[rows, cols] = vals
+    expect = np.zeros((2, 4))
+    expect[0, 0], expect[1, 2], expect[0, 3] = 1.0, -2.5, 0.5
+    np.testing.assert_array_equal(A, expect)
+
+
+def test_mm_symmetric_expansion(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate real symmetric
+3 3 4
+1 1 2.0
+2 1 -1.0
+3 2 -1.0
+3 3 2.0
+""")
+    rows, cols, vals, shape = load_matrix_market(p)
+    assert len(rows) == 6  # two off-diagonal entries mirrored
+    A = np.zeros(shape)
+    A[rows, cols] = vals
+    assert np.array_equal(A, A.T)
+    assert A[0, 1] == -1.0 and A[1, 0] == -1.0
+
+
+def test_mm_skew_symmetric(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate real skew-symmetric
+3 3 2
+2 1 1.5
+3 1 -2.0
+""")
+    rows, cols, vals, shape = load_matrix_market(p)
+    A = np.zeros(shape)
+    A[rows, cols] = vals
+    assert np.array_equal(A, -A.T)
+
+
+def test_mm_pattern_unit_values(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate pattern symmetric
+3 3 3
+1 1
+2 1
+3 2
+""")
+    rows, cols, vals, shape = load_matrix_market(p)
+    assert np.all(vals == 1.0)
+    assert len(rows) == 5  # diagonal kept once, off-diagonals mirrored
+
+
+def test_mm_integer_field(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate integer general
+2 2 2
+1 2 3
+2 1 -4
+""")
+    _r, _c, vals, _shape = load_matrix_market(p)
+    np.testing.assert_array_equal(np.sort(vals), [-4.0, 3.0])
+
+
+@pytest.mark.parametrize("header,err", [
+    ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 1\n",
+     "unsupported field"),
+    ("%%MatrixMarket matrix array real general\n1 1\n1.0\n",
+     "matrix coordinate"),
+    ("%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1\n",
+     "unsupported symmetry"),
+    ("not a matrix market file\n", "not a MatrixMarket"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n",
+     "promises 3 entries"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+     "out of bounds"),
+])
+def test_mm_rejects_malformed(tmp_path, header, err):
+    p = _write(tmp_path, header)
+    with pytest.raises(ValueError, match=err):
+        load_matrix_market(p)
+
+
+def test_mm_to_cb_spmv_roundtrip(tmp_path):
+    """A .mtx file drives the full pipeline: load -> CBMatrix -> cb_spmv."""
+    rng = np.random.default_rng(0)
+    rows, cols, vals = matrices.uniform_random(60, 44, density=0.05, seed=1)
+    lines = [f"{r + 1} {c + 1} {v:.17g}"
+             for r, c, v in zip(rows, cols, vals)]
+    p = _write(tmp_path,
+               "%%MatrixMarket matrix coordinate real general\n"
+               f"60 44 {len(rows)}\n" + "\n".join(lines) + "\n")
+    r2, c2, v2, shape = load_matrix_market(p)
+    cb = CBMatrix.from_coo(r2, c2, v2.astype(np.float32), shape,
+                           block_size=16, val_dtype=np.float32)
+    x = rng.standard_normal(shape[1]).astype(np.float32)
+    y = ops.cb_spmv(build_streams(cb).device_put(), jnp.asarray(x),
+                    impl="reference")
+    y_ref = dense_oracle(rows, cols, vals.astype(np.float32), shape, x)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# CBMatrix save / load
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("colagg", [True, False])
+def test_cb_save_load_roundtrip(tmp_path, colagg):
+    rows, cols, vals = matrices.power_law(120, 120, seed=2)
+    cb = CBMatrix.from_coo(rows, cols, vals.astype(np.float32), (120, 120),
+                           block_size=16, val_dtype=np.float32,
+                           use_column_aggregation=colagg)
+    path = tmp_path / "m.npz"
+    cb.save(path)
+    cb2 = CBMatrix.load(path)
+
+    assert cb2.shape == cb.shape
+    assert cb2.block_size == cb.block_size
+    assert cb2.val_dtype == cb.val_dtype
+    assert cb2.thresholds == cb.thresholds
+    assert cb2.nnz == cb.nnz
+    assert cb.stats() == cb2.stats()
+    np.testing.assert_array_equal(cb.to_dense(), cb2.to_dense())
+
+    # the derived kernel streams are bit-identical -> the loaded plan IS
+    # the saved plan (preprocessing amortized across processes)
+    import jax
+
+    for build in (build_streams, build_super_streams):
+        a = jax.tree_util.tree_leaves(build(cb))
+        b = jax.tree_util.tree_leaves(build(cb2))
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def test_cb_save_load_spmv_identical(tmp_path):
+    rows, cols, vals = matrices.banded(100, 90, seed=4)
+    cb = CBMatrix.from_coo(rows, cols, vals.astype(np.float32), (100, 90),
+                           block_size=16, val_dtype=np.float32)
+    path = tmp_path / "m.npz"
+    cb.save(path)
+    cb2 = CBMatrix.load(path)
+    x = jnp.asarray(
+        np.random.default_rng(5).standard_normal(90).astype(np.float32)
+    )
+    y1 = ops.cb_spmv(build_super_streams(cb), x, impl="reference")
+    y2 = ops.cb_spmv(build_super_streams(cb2), x, impl="reference")
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_cb_load_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "bogus.npz"
+    np.savez(path, schema=np.asarray("cb-matrix/v999"))
+    with pytest.raises(ValueError, match="schema"):
+        CBMatrix.load(path)
+
+
+def test_cb_save_load_float64(tmp_path):
+    rows, cols, vals = matrices.uniform_random(64, 64, density=0.03, seed=6)
+    cb = CBMatrix.from_coo(rows, cols, vals, (64, 64), block_size=8,
+                           val_dtype=np.float64)
+    path = tmp_path / "m64.npz"
+    cb.save(path)
+    cb2 = CBMatrix.load(path)
+    assert cb2.val_dtype == np.dtype(np.float64)
+    np.testing.assert_array_equal(cb.to_dense(), cb2.to_dense())

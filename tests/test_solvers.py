@@ -1,0 +1,303 @@
+"""Solver subsystem tests: Krylov convergence vs CSR references,
+preconditioners, the transposed-stream rmatvec contract, spectral
+drivers, and the single-trace acceptance criterion."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cb_matrix import CBMatrix
+from repro.core.streams import build_super_streams
+from repro.data import matrices
+from repro.kernels import ops
+from repro.solvers import (
+    CBLinearOperator,
+    bicgstab,
+    block_jacobi,
+    cg,
+    chebyshev_subspace,
+    gmres,
+    jacobi,
+    pagerank,
+    pagerank_operator,
+    power_iteration,
+)
+from repro.solvers import krylov as krylov_mod
+
+TOL = 1e-6
+
+
+def _dense_of(rows, cols, vals, shape):
+    A = np.zeros(shape, np.float32)
+    np.add.at(A, (rows, cols), vals)  # duplicate coords sum, like the CB path
+    return A
+
+
+def _spd_case(d=96, seed=3, block_size=16, group_size=None):
+    rows, cols, vals = matrices.spd_banded(d, bandwidth=7, seed=seed)
+    vals = vals.astype(np.float32)
+    cb = CBMatrix.from_coo(rows, cols, vals, (d, d), block_size=block_size,
+                           val_dtype=np.float32)
+    op = CBLinearOperator.from_cb(cb, group_size=group_size,
+                                  with_rmatvec=True, with_matmat=True)
+    return cb, op, _dense_of(rows, cols, vals, (d, d))
+
+
+def _nonsym_case(d=96, seed=5):
+    rows, cols, vals = matrices.banded(d, d, bandwidth=7, fill=0.8, seed=seed)
+    diag = np.arange(d)
+    rows = np.concatenate([rows, diag])
+    cols = np.concatenate([cols, diag])
+    vals = np.concatenate([vals, np.full(d, 8.0)]).astype(np.float32)
+    cb = CBMatrix.from_coo(rows, cols, vals, (d, d), block_size=16,
+                           val_dtype=np.float32)
+    return cb, CBLinearOperator.from_cb(cb), _dense_of(rows, cols, vals,
+                                                       (d, d))
+
+
+def _scipy_iters(kind, A, b, tol=TOL, maxiter=500):
+    """Iteration count of the scipy CSR reference, same stopping rule."""
+    import scipy.sparse as sp
+    import scipy.sparse.linalg as spla
+
+    count = [0]
+    fn = {"cg": spla.cg, "bicgstab": spla.bicgstab}[kind]
+    x, info = fn(sp.csr_matrix(A), b, rtol=tol, atol=0.0, maxiter=maxiter,
+                 callback=lambda *_: count.__setitem__(0, count[0] + 1))
+    assert info == 0
+    return count[0]
+
+
+# ---------------------------------------------------------------------------
+# Krylov convergence vs the CSR references
+# ---------------------------------------------------------------------------
+
+def test_cg_iterations_match_csr_reference():
+    _cb, op, A = _spd_case()
+    b = np.random.default_rng(0).standard_normal(A.shape[0]).astype(np.float32)
+    res = cg(op, jnp.asarray(b), tol=TOL, maxiter=500, impl="reference")
+    assert bool(res.converged)
+    assert float(res.residual) <= TOL * np.linalg.norm(b)
+    ref_iters = _scipy_iters("cg", A.astype(np.float64), b)
+    assert abs(int(res.iterations) - ref_iters) <= 2
+    x_ref = np.linalg.solve(A.astype(np.float64), b)
+    assert np.linalg.norm(np.asarray(res.x) - x_ref) <= 1e-4 * np.linalg.norm(x_ref)
+
+
+def test_bicgstab_iterations_match_csr_reference():
+    _cb, op, A = _nonsym_case()
+    b = np.random.default_rng(1).standard_normal(A.shape[0]).astype(np.float32)
+    res = bicgstab(op, jnp.asarray(b), tol=TOL, maxiter=500, impl="reference")
+    assert bool(res.converged)
+    assert float(res.residual) <= TOL * np.linalg.norm(b)
+    ref_iters = _scipy_iters("bicgstab", A.astype(np.float64), b)
+    assert abs(int(res.iterations) - ref_iters) <= 2
+    x_ref = np.linalg.solve(A.astype(np.float64), b)
+    assert np.linalg.norm(np.asarray(res.x) - x_ref) <= 1e-4 * np.linalg.norm(x_ref)
+
+
+def test_gmres_converges_nonsymmetric():
+    _cb, op, A = _nonsym_case(seed=9)
+    b = np.random.default_rng(2).standard_normal(A.shape[0]).astype(np.float32)
+    res = gmres(op, jnp.asarray(b), tol=TOL, restart=15, maxiter=30,
+                impl="reference")
+    assert bool(res.converged)
+    x_ref = np.linalg.solve(A.astype(np.float64), b)
+    assert np.linalg.norm(np.asarray(res.x) - x_ref) <= 1e-4 * np.linalg.norm(x_ref)
+
+
+def test_residual_history_buffer_semantics():
+    _cb, op, A = _spd_case(seed=11)
+    b = np.random.default_rng(3).standard_normal(A.shape[0]).astype(np.float32)
+    res = cg(op, jnp.asarray(b), tol=TOL, maxiter=64, impl="reference")
+    hist = np.asarray(res.history)
+    k = int(res.iterations)
+    assert hist.shape == (65,)
+    assert np.all(hist[: k + 1] >= 0)          # reached entries recorded
+    assert np.all(hist[k + 1 :] == -1.0)       # fixed buffer, -1 beyond
+    assert hist[0] == pytest.approx(np.linalg.norm(b), rel=1e-5)
+    assert hist[k] == pytest.approx(float(res.residual), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Preconditioners from the CB block structure
+# ---------------------------------------------------------------------------
+
+def test_jacobi_apply_matches_diag():
+    cb, _op, A = _spd_case(seed=7)
+    M = jacobi(cb)
+    r = np.random.default_rng(4).standard_normal(A.shape[0]).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(M.apply(jnp.asarray(r))), r / np.diag(A), rtol=1e-5
+    )
+
+
+def test_block_jacobi_apply_matches_dense_blockdiag_inverse():
+    cb, _op, A = _spd_case(d=90, seed=8)  # ragged last block
+    M = block_jacobi(cb)
+    B, m = cb.block_size, A.shape[0]
+    r = np.random.default_rng(5).standard_normal(m).astype(np.float32)
+    expect = np.zeros(m)
+    for b0 in range(0, m, B):
+        hi = min(b0 + B, m)
+        blk = A[b0:hi, b0:hi].astype(np.float64)
+        expect[b0:hi] = np.linalg.solve(blk, r[b0:hi])
+    np.testing.assert_allclose(
+        np.asarray(M.apply(jnp.asarray(r))), expect, rtol=2e-4, atol=2e-5
+    )
+
+
+def test_block_jacobi_cuts_cg_iterations():
+    cb, op, A = _spd_case(seed=13)
+    b = np.random.default_rng(6).standard_normal(A.shape[0]).astype(np.float32)
+    plain = cg(op, jnp.asarray(b), tol=TOL, maxiter=500, impl="reference")
+    pre = cg(op, jnp.asarray(b), block_jacobi(cb), tol=TOL, maxiter=500,
+             impl="reference")
+    assert bool(pre.converged)
+    assert int(pre.iterations) <= int(plain.iterations)
+
+
+# ---------------------------------------------------------------------------
+# Operator contracts
+# ---------------------------------------------------------------------------
+
+def test_rmatvec_bit_agreement_with_dense_transpose():
+    """rmatvec through the precomputed transposed stream is bit-identical
+    to building the CB pipeline on the dense transpose's triplets."""
+    cb, op, A = _spd_case(d=90, seed=17, group_size=4)
+    At = A.T
+    rt, ct = np.nonzero(At)
+    cbT = CBMatrix.from_coo(rt, ct, At[rt, ct], At.shape,
+                            block_size=cb.block_size, val_dtype=np.float32,
+                            thresholds=cb.thresholds)
+    sT_ref = build_super_streams(cbT, group_size=4)
+    y = jnp.asarray(
+        np.random.default_rng(7).standard_normal(A.shape[0]).astype(np.float32)
+    )
+    ours = np.asarray(op.rmatvec(y, impl="pallas", interpret=True))
+    ref = np.asarray(ops.cb_spmv(sT_ref, y, impl="pallas", interpret=True))
+    assert np.array_equal(ours, ref)
+    # and it is the transpose, numerically
+    np.testing.assert_allclose(ours, A.T @ np.asarray(y), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_matmat_multi_rhs():
+    _cb, op, A = _spd_case(seed=19)
+    X = np.random.default_rng(8).standard_normal((A.shape[1], 5)).astype(
+        np.float32
+    )
+    out = np.asarray(op.matmat(jnp.asarray(X), impl="reference"))
+    np.testing.assert_allclose(out, A @ X, rtol=1e-4, atol=1e-4)
+
+
+def test_capability_gating():
+    cb, _, _ = _spd_case(seed=23)
+    op = CBLinearOperator.from_cb(cb)  # capabilities default OFF
+    with pytest.raises(ValueError, match="with_rmatvec"):
+        op.rmatvec(jnp.zeros(op.shape[0]))
+    with pytest.raises(ValueError, match="with_matmat"):
+        op.matmat(jnp.zeros((op.shape[1], 2)))
+
+
+def test_cb_spmv_into_accumulates():
+    cb, op, A = _spd_case(seed=29)
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    y0 = rng.standard_normal(A.shape[0]).astype(np.float32)
+    for impl in ("reference", "pallas"):
+        out = ops.cb_spmv_into(jnp.asarray(y0), op.streams, jnp.asarray(x),
+                               impl=impl, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), y0 + A @ x, rtol=1e-4,
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: single-trace CG on the batched engine
+# ---------------------------------------------------------------------------
+
+def test_cg_block_jacobi_single_trace_batched_engine():
+    """CG + block-Jacobi to 1e-6 on the SPD corpus in ONE jit trace, inner
+    matvec on the batched super-block engine (group_size > 1)."""
+    cb, op, A = _spd_case(d=96, seed=31, group_size=4)
+    assert op.group_size > 1
+    # the packer really fused blocks: fewer grid steps than blocks
+    s = op.streams
+    groups = s.num_dense_groups + s.num_panel_groups + s.num_coo_groups
+    assert groups < cb.stats()["num_blocks"]
+
+    M = block_jacobi(cb)
+    rng = np.random.default_rng(10)
+    before = dict(krylov_mod._TRACE_COUNTS)
+    maxiter = 77  # unique static config -> this test owns its cache entry
+    for seed in (0, 1):
+        b = rng.standard_normal(A.shape[0]).astype(np.float32)
+        res = cg(op, jnp.asarray(b), M, tol=TOL, maxiter=maxiter,
+                 impl="pallas", interpret=True)
+        assert bool(res.converged)
+        assert int(res.iterations) > 1
+        assert float(res.residual) <= TOL * np.linalg.norm(b)
+    after = dict(krylov_mod._TRACE_COUNTS)
+    # one trace of the solver, one of the loop body, across BOTH solves —
+    # zero per-iteration retrace despite iterations > 1 each solve
+    assert after.get("cg", 0) - before.get("cg", 0) == 1
+    assert after.get("cg_body", 0) - before.get("cg_body", 0) == 1
+
+
+# ---------------------------------------------------------------------------
+# Spectral drivers
+# ---------------------------------------------------------------------------
+
+def test_power_iteration_dominant_eigenvalue():
+    # seed 3's spectrum has a healthy dominant gap (lam2/lam1 ~ 0.81)
+    _cb, op, A = _spd_case(seed=3)
+    ev = np.linalg.eigvalsh(A.astype(np.float64))
+    v0 = jnp.asarray(
+        np.random.default_rng(11).standard_normal(A.shape[0]).astype(
+            np.float32)
+    )
+    res = power_iteration(op, v0, tol=1e-6, maxiter=1000, impl="reference")
+    assert bool(res.converged)
+    assert float(res.eigenvalue) == pytest.approx(ev[-1], rel=1e-4)
+
+
+def test_chebyshev_subspace_top_eigenpairs():
+    _cb, op, A = _spd_case(seed=41)
+    ev = np.linalg.eigvalsh(A.astype(np.float64))
+    V0 = jnp.asarray(
+        np.random.default_rng(12).standard_normal((A.shape[0], 6)).astype(
+            np.float32)
+    )
+    vals, vecs = chebyshev_subspace(op, V0, lb=float(ev[0]),
+                                    ub=float(ev[-8]), degree=8, iters=6,
+                                    impl="reference")
+    np.testing.assert_allclose(np.asarray(vals)[-4:], ev[-4:], rtol=1e-3)
+    # Ritz vectors are eigenvectors: ||A q - lambda q|| small
+    q = np.asarray(vecs)[:, -1]
+    lam = float(np.asarray(vals)[-1])
+    assert np.linalg.norm(A @ q - lam * q) <= 1e-2 * abs(lam)
+
+
+def test_pagerank_power_law_matches_numpy():
+    n = 200
+    src, dst, _ = matrices.power_law(n, n, seed=5)
+    op, dangling = pagerank_operator(src, dst, n, group_size=4)
+    assert op.group_size > 1
+    res = pagerank(op, dangling, maxiter=300, impl="reference")
+    p = np.asarray(res.eigenvector)
+    assert p.sum() == pytest.approx(1.0, abs=1e-5)
+    assert np.all(p > 0)
+    # numpy reference on the dense Google matrix
+    key = np.unique(src.astype(np.int64) * n + dst.astype(np.int64))
+    s, d = key // n, key % n
+    outdeg = np.bincount(s, minlength=n).astype(np.float64)
+    P = np.zeros((n, n))
+    P[d, s] = 1.0 / outdeg[s]
+    x = np.full(n, 1.0 / n)
+    for _ in range(300):
+        xn = 0.85 * (P @ x + x[outdeg == 0].sum() / n) + 0.15 / n
+        xn /= xn.sum()
+        if np.abs(xn - x).sum() < 1e-14:
+            break
+        x = xn
+    np.testing.assert_allclose(p, x, atol=1e-6)
