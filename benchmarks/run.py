@@ -37,13 +37,13 @@ def main() -> None:
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,fig10,fig11,fig12,fig34,"
-                         "spmv_batch,solvers")
+                         "spmv_batch,spmm,solvers")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write executed sections' rows to PATH as JSON")
     args = ap.parse_args()
 
     from . import fig9_perf, fig10_locality, fig11_ablation, fig12_overhead
-    from . import fig34_distribution, solvers, spmv_batch
+    from . import fig34_distribution, solvers, spmm_batch, spmv_batch
 
     sections = {
         "fig9": ("Fig. 9 — SpMV perf vs CSR/COO/BSR", fig9_perf.main),
@@ -53,6 +53,8 @@ def main() -> None:
         "fig34": ("Fig. 3/4 — distribution + balance", fig34_distribution.main),
         "spmv_batch": ("Batched super-block engine vs unbatched",
                        spmv_batch.main),
+        "spmm": ("Batched SpMM super-tile engine vs flat tile stream",
+                 spmm_batch.main),
         "solvers": ("Iterative solvers vs scipy.sparse CPU reference",
                     solvers.main),
     }

@@ -1,0 +1,120 @@
+"""Batched SpMM super-tile engine: grid-step shrink + wall-time vs flat.
+
+The SpMM batching PR's measurable claims, per corpus matrix:
+
+  * **grid-step shrink** (``steps_unbatched`` / ``steps_batched``) — the
+    flat tile stream runs one B x B weight tile per grid step (per
+    activation n-tile); the super-tile packer fuses up to G per step, so
+    the step count drops by ~G. Pure preprocessing arithmetic —
+    deterministic, hardware-independent. The acceptance bar is >= 4x at
+    G=16 across the corpus.
+  * **streamed weight elements** (``padded_elems_*``) — the packed
+    stream pads only the ragged tail group's empty slots, so the
+    overhead over the flat stream stays a few percent.
+  * **per-call wall time of the kernel path** (``t_unbatched`` /
+    ``t_batched``) — the Pallas engine end-to-end (interpret mode off
+    TPU). Unlike SpMV, interpret mode *understates* the SpMM batching
+    win: the interpreter emulates each of the G per-slot X fetches at
+    the same cost as a full grid step, so the batched step pays ~G fetch
+    emulations and the ratio hovers near (or slightly below) 1x off-TPU.
+    The metric is guarded as a ratio against the checked-in baseline to
+    catch the engine getting *relatively* slower; the amortization claim
+    itself is a compiled-TPU measurement (ROADMAP perf-headroom item).
+    ``t_ref_*`` records the pure-XLA reference lowering for context, as
+    in ``spmv_batch``.
+
+SpMM per-call FLOPs are ~N (=128 lanes) times SpMV's, so interpret-mode
+timing prices out the small corpus's largest size class: at
+``scale="small"`` rows are restricted to matrices with
+m <= MAX_TIMED_ROWS (the step/padded metrics are identical arithmetic at
+any size, so nothing is lost but wall-clock noise). ``scale="bench"``
+runs its full corpus like ``spmv_batch`` — that scale targets compiled
+TPU hardware, where the per-call cost is not interpreter-bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CBMatrix
+from repro.core.streams import (
+    build_super_tile_stream, spmm_block_n, tile_stream_from_cb,
+)
+from repro.data import matrices
+from repro.kernels import ops
+
+from ._timing import geomean, time_min
+
+N_RHS = 128           # one full lane tile of right-hand sides
+MAX_TIMED_ROWS = 512  # scale="small" interpret-mode budget (see module doc)
+TIMING_REPS = 7       # SpMM calls are ~N_RHS x costlier than SpMV's
+
+
+def run(scale="small", group_size=None) -> list[dict]:
+    rows_out = []
+    kernel = jax.jit(lambda s, x: ops.cb_spmm(s, x, impl="pallas"))
+    reference = jax.jit(lambda s, x: ops.cb_spmm(s, x, impl="reference"))
+    for spec, r, c, v, shape in matrices.corpus(scale):
+        if scale == "small" and shape[0] > MAX_TIMED_ROWS:
+            continue
+        cb = CBMatrix.from_coo(r, c, v.astype(np.float32), shape,
+                               block_size=16, val_dtype=np.float32)
+        flat = tile_stream_from_cb(cb)
+        packed = build_super_tile_stream(flat, group_size=group_size)
+        flat_d = jax.tree_util.tree_map(jnp.asarray, flat)
+        packed_d = jax.tree_util.tree_map(jnp.asarray, packed)
+        X = jnp.asarray(
+            np.random.default_rng(0).standard_normal((shape[1], N_RHS)),
+            jnp.float32,
+        )
+
+        n_tiles = -(-N_RHS // spmm_block_n(N_RHS))
+        B = cb.block_size
+        nnz = max(1, cb.nnz)
+        rows_out.append({
+            "matrix": spec.name,
+            "nnz": int(cb.nnz),
+            "group_size": int(packed.group_size),
+            "steps_unbatched": int(n_tiles * flat.num_tiles),
+            "steps_batched": int(n_tiles * packed.num_groups),
+            "padded_elems_unbatched": int(flat.num_tiles * B * B),
+            "padded_elems_batched": int(packed.padded_work()["tiles"]),
+            "padded_ratio_unbatched": flat.num_tiles * B * B / nnz,
+            "padded_ratio_batched": packed.padded_work()["tiles"] / nnz,
+            "t_unbatched": time_min(kernel, flat_d, X, reps=TIMING_REPS),
+            "t_batched": time_min(kernel, packed_d, X, reps=TIMING_REPS),
+            "t_ref_unbatched": time_min(reference, flat_d, X,
+                                        reps=TIMING_REPS),
+            "t_ref_batched": time_min(reference, packed_d, X,
+                                      reps=TIMING_REPS),
+        })
+    return rows_out
+
+
+def main(scale="small"):
+    rows = run(scale)
+    if not rows:
+        print("no matrices in scope at this scale")
+        return rows
+    print("matrix,nnz,G,steps_un,steps_b,padded_ratio_un,padded_ratio_b,"
+          "t_un_ms,t_b_ms,t_ref_un_us,t_ref_b_us")
+    for r in rows:
+        print(f"{r['matrix']},{r['nnz']},{r['group_size']},"
+              f"{r['steps_unbatched']},{r['steps_batched']},"
+              f"{r['padded_ratio_unbatched']:.2f},"
+              f"{r['padded_ratio_batched']:.2f},"
+              f"{r['t_unbatched'] * 1e3:.2f},{r['t_batched'] * 1e3:.2f},"
+              f"{r['t_ref_unbatched'] * 1e6:.0f},"
+              f"{r['t_ref_batched'] * 1e6:.0f}")
+    print(f"GEOMEAN kernel-path speedup (un/b): "
+          f"{geomean([r['t_unbatched'] / r['t_batched'] for r in rows]):.2f}x; "
+          f"step shrink: "
+          f"{geomean([r['steps_unbatched'] / max(1, r['steps_batched']) for r in rows]):.2f}x; "
+          f"padded-work growth: "
+          f"{geomean([r['padded_elems_batched'] / max(1, r['padded_elems_unbatched']) for r in rows]):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

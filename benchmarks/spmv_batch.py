@@ -22,8 +22,6 @@ are a ROADMAP item.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,18 +31,7 @@ from repro.core.streams import build_streams, build_super_streams
 from repro.data import matrices
 from repro.kernels import ops
 
-
-def _time(fn, *args, reps=15):
-    """Min of individually-timed calls: robust to scheduler noise at the
-    microsecond scales these small matrices produce on a shared box."""
-    fn(*args).block_until_ready()
-    fn(*args).block_until_ready()
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn(*args).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best
+from ._timing import geomean, time_min
 
 
 def run(scale="small", group_size=None) -> list[dict]:
@@ -79,10 +66,10 @@ def run(scale="small", group_size=None) -> list[dict]:
             "padded_elems_batched": int(sum(sw.values())),
             "padded_ratio_unbatched": sum(uw.values()) / nnz,
             "padded_ratio_batched": sum(sw.values()) / nnz,
-            "t_unbatched": _time(kernel, flat_d, x),
-            "t_batched": _time(kernel, packed_d, x),
-            "t_ref_unbatched": _time(reference, flat_d, x),
-            "t_ref_batched": _time(reference, packed_d, x),
+            "t_unbatched": time_min(kernel, flat_d, x),
+            "t_batched": time_min(kernel, packed_d, x),
+            "t_ref_unbatched": time_min(reference, flat_d, x),
+            "t_ref_batched": time_min(reference, packed_d, x),
         })
     return rows_out
 
@@ -99,13 +86,12 @@ def main(scale="small"):
               f"{r['t_unbatched'] * 1e3:.2f},{r['t_batched'] * 1e3:.2f},"
               f"{r['t_ref_unbatched'] * 1e6:.0f},"
               f"{r['t_ref_batched'] * 1e6:.0f}")
-    geo = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
     print(f"GEOMEAN kernel-path speedup (un/b): "
-          f"{geo([r['t_unbatched'] / r['t_batched'] for r in rows]):.2f}x; "
+          f"{geomean([r['t_unbatched'] / r['t_batched'] for r in rows]):.2f}x; "
           f"step shrink: "
-          f"{geo([r['steps_unbatched'] / max(1, r['steps_batched']) for r in rows]):.2f}x; "
+          f"{geomean([r['steps_unbatched'] / max(1, r['steps_batched']) for r in rows]):.2f}x; "
           f"padded-work shrink: "
-          f"{geo([r['padded_elems_unbatched'] / max(1, r['padded_elems_batched']) for r in rows]):.2f}x")
+          f"{geomean([r['padded_elems_unbatched'] / max(1, r['padded_elems_batched']) for r in rows]):.2f}x")
     return rows
 
 

@@ -6,8 +6,8 @@
 Two checks, both cheap enough for every CI run:
 
   * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output,
-    every ``spmv_batch``/``solvers`` row carries its required, finite
-    metrics, and every solver row converged;
+    every ``spmv_batch``/``spmm``/``solvers`` row carries its required,
+    finite metrics, and every solver row converged;
   * **regression** — deterministic metrics (``padded_*``, ``steps_*``)
     are compared row by row against the baseline (a 2x jump is always a
     genuine packing bug). Timings are guarded as the **batched /
@@ -36,12 +36,16 @@ REQUIRED_SPMV_BATCH_KEYS = (
     "padded_ratio_unbatched", "padded_ratio_batched",
     "t_unbatched", "t_batched",
 )
+# the SpMM section mirrors spmv_batch's schema exactly (same batched-
+# engine claims: step shrink, padded weight stream, kernel-path timing)
+REQUIRED_SPMM_KEYS = REQUIRED_SPMV_BATCH_KEYS
 REQUIRED_SOLVER_KEYS = (
     "matrix", "solver", "n", "nnz", "iters_to_tol", "iters_ref",
     "converged", "t_per_iter", "t_ref_per_iter",
 )
 REQUIRED_KEYS_PER_SECTION = {
     "spmv_batch": REQUIRED_SPMV_BATCH_KEYS,
+    "spmm": REQUIRED_SPMM_KEYS,
     "solvers": REQUIRED_SOLVER_KEYS,
 }
 ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_", "iters_")

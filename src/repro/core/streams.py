@@ -24,7 +24,7 @@ encode the column-aggregation ``restore_cols`` mapping (or the trivial
 time — matching Alg. 3's precomputed ``cols_offset``/``restore_cols``
 lookups but resolved at preprocessing time where they are free.
 
-Two stream granularities share this layout:
+Three stream granularities share this layout:
 
   * ``SpMVStreams``       — one block per stream row (one per grid step).
   * ``SuperBlockStreams`` — ``build_super_streams``: up to ``group_size``
@@ -35,6 +35,12 @@ Two stream granularities share this layout:
     each lane belongs to. The Alg. 2 balancer assigns blocks to groups so
     every grid step carries near-equal payload — the paper's inter-block
     load balancing applied at grid-step granularity.
+  * ``SuperTileStream``   — ``build_super_tile_stream``: the SpMM
+    (multi-RHS) analogue. Up to ``group_size`` block-dense weight tiles
+    stack vertically into a (G*B, B) super-tile per grid step, with
+    per-group ``brow``/``bcol`` slot maps; the same Alg. 2 balancer
+    equalizes nnz per group. ``spmm_block_n`` is the single home of the
+    SpMM lane rule (activation tile widths are LANE multiples).
 """
 from __future__ import annotations
 
@@ -55,6 +61,8 @@ from .formats import FMT_COO, FMT_CSR, FMT_DENSE
 
 SUBLANE = 8  # float32 sublane count; payload widths align to this for DMA
 
+LANE = 128  # VPU/MXU lane count; SpMM activation tile widths align to this
+
 
 def pad_width(width: int, mult: int = SUBLANE) -> int:
     """Round a payload width up to the DMA-friendly multiple.
@@ -64,6 +72,26 @@ def pad_width(width: int, mult: int = SUBLANE) -> int:
     behaviour of silently materializing a phantom ``(0, B, 8)`` buffer.
     """
     return -(-int(width) // mult) * mult
+
+
+def spmm_block_n(n_cols: int, block_n: int = LANE) -> int:
+    """The SpMM activation-tile width: lane-aligned, at most ``block_n``.
+
+    THE single place the SpMM lane rule lives. The compiled Mosaic
+    pipeline requires the minor (lane) dimension of every block to be a
+    multiple of ``LANE`` (= 128 for float32); the old
+    ``min(block_n, max(8, N))`` policy produced e.g. a 100-wide lane
+    block for N=100, which only ever worked because tests run in
+    interpret mode. Here ``N`` is rounded *up* to a lane multiple and
+    capped at ``block_n`` (itself validated to be lane-aligned), so the
+    chosen width always satisfies ``bn % LANE == 0`` and callers pad the
+    activation matrix to ``ceil(N / bn) * bn`` columns.
+    """
+    if block_n % LANE:
+        raise ValueError(
+            f"block_n must be a multiple of {LANE} lanes, got {block_n}"
+        )
+    return min(block_n, pad_width(max(int(n_cols), 1), LANE))
 
 
 # Aim each grid step's payload at about this many elements: big enough to
@@ -541,10 +569,14 @@ def build_transposed_super_streams(
 class TileStream:
     """Block-dense (BSR-like) stream for CB-SpMM.
 
-    Blocks are sorted block-row-major and padded so that *every* block row
-    owns at least one (possibly all-zero) tile — the coverage requirement
-    of the kernel's output-revisiting accumulation (the TPU-deterministic
-    replacement for the paper's atomicAdd, DESIGN.md §2).
+    Blocks are sorted in canonical ``(brow, bcol)`` order — BOTH builders
+    (``build_tile_stream`` from raw COO, ``tile_stream_from_cb`` from the
+    full CB pipeline) emit this exact order, so two streams of the same
+    matrix are bit-identical regardless of which path produced them.
+    Every block row owns at least one (possibly all-zero) coverage tile;
+    the batched kernel's scatter-add combine no longer *needs* coverage
+    for initialization (the accumulator starts at zero), but the
+    guarantee is kept so stream geometry stays stable across builders.
     """
 
     block_size: int
@@ -554,7 +586,7 @@ class TileStream:
     nb: int
     tiles: jax.Array   # (nt, B, B)
     brow: jax.Array    # (nt,) int32, ascending
-    bcol: jax.Array    # (nt,) int32
+    bcol: jax.Array    # (nt,) int32, ascending within each block row
 
     @property
     def num_tiles(self) -> int:
@@ -592,7 +624,7 @@ def build_tile_stream(
         brows.append(int(part.blk_row_idx[i]))
         bcols.append(int(part.blk_col_idx[i]))
 
-    # Coverage: every block row must own >= 1 tile (revisit init correctness).
+    # Coverage: every block row must own >= 1 tile (stable stream geometry).
     present = set(brows)
     for rb in range(mb):
         if rb not in present:
@@ -600,7 +632,8 @@ def build_tile_stream(
             brows.append(rb)
             bcols.append(0)
 
-    order = np.argsort(np.asarray(brows), kind="stable")
+    # Canonical (brow, bcol) order — bit-identical to tile_stream_from_cb.
+    order = np.lexsort((np.asarray(bcols), np.asarray(brows)))
     tiles_arr = np.stack(tiles)[order] if tiles else np.zeros((0, B, B), vals.dtype)
     return TileStream(
         block_size=B, m=m, n=n, mb=mb, nb=nb,
@@ -639,7 +672,7 @@ def tile_stream_from_cb(cb: CBMatrix) -> TileStream:
         r_all = gc_all = br_all = np.zeros(0, np.int64)
         v_all = np.zeros(0, cb.val_dtype)
 
-    key = br_all * nb + gc_all // B
+    key = br_all * nb + gc_all // B  # ascending unique keys = (brow, bcol)
     ukeys, inv = np.unique(key, return_inverse=True)
     tiles = np.zeros((len(ukeys), B, B), dtype=cb.val_dtype)
     np.add.at(tiles, (inv, r_all, gc_all % B), v_all)
@@ -654,10 +687,122 @@ def tile_stream_from_cb(cb: CBMatrix) -> TileStream:
         )
         brow_arr = np.concatenate([brow_arr, missing])
         bcol_arr = np.concatenate([bcol_arr, np.zeros(len(missing), np.int32)])
-    order = np.argsort(brow_arr, kind="stable")
+    # Canonical (brow, bcol) order — bit-identical to build_tile_stream.
+    order = np.lexsort((bcol_arr, brow_arr))
     return TileStream(
         block_size=B, m=m, n=n, mb=mb, nb=nb,
         tiles=tiles[order],
         brow=brow_arr[order],
         bcol=bcol_arr[order],
     )
+
+
+# ---------------------------------------------------------------------------
+# Super-tile stream: the batched SpMM execution engine's input format.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuperTileStream:
+    """Tile stream with ``Gt`` weight tiles fused per grid step.
+
+    One stream row = one Pallas grid step (per activation n-tile). Slot
+    ``g`` of group ``i`` owns sublanes ``[g*B, (g+1)*B)`` of the
+    ``(Gt*B, B)`` super-tile; ``brow``/``bcol`` are the per-group slot
+    maps routing that slot's partial to output block-row ``brow[i, g]``
+    and its activation DMA to X block-row ``bcol[i, g]``. Slots the
+    packer left empty hold a zero tile with ``brow``/``bcol`` 0: they
+    DMA X block 0 and scatter-add exact zeros into output row 0.
+
+    Unlike the SpMV super streams there is no lane packing — dense
+    ``(B, B)`` tiles are already uniform — so the only balancing axis is
+    nnz per tile, which Alg. 2 equalizes across groups to keep each
+    step's useful-FLOP fraction even.
+    """
+
+    # -- static ---------------------------------------------------------
+    block_size: int
+    m: int
+    n: int
+    mb: int
+    nb: int
+    group_size: int          # requested tiles per step (packer target)
+    # -- data ------------------------------------------------------------
+    tiles: jax.Array   # (gt, Gt*B, B)
+    brow: jax.Array    # (gt, Gt) int32
+    bcol: jax.Array    # (gt, Gt) int32
+
+    @property
+    def num_groups(self) -> int:
+        return self.tiles.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.brow.shape[1]
+
+    def padded_work(self) -> dict:
+        """Weight elements one full sweep streams, padding included."""
+        return {"tiles": int(np.prod(self.tiles.shape))}
+
+
+jax.tree_util.register_dataclass(
+    SuperTileStream,
+    data_fields=["tiles", "brow", "bcol"],
+    meta_fields=["block_size", "m", "n", "mb", "nb", "group_size"],
+)
+
+
+def build_super_tile_stream(
+    ts: TileStream, group_size: int | None = None
+) -> SuperTileStream:
+    """Pack SpMM tiles into nnz-balanced super-tile groups (host-side).
+
+    Mirrors ``build_super_streams`` for the tile stream: ``group_size=
+    None`` picks ``auto_group_size(B)``; tiles are assigned to groups by
+    the Alg. 2 heap balancer (``balance.grid_group_balance``) on per-tile
+    nnz, with slots evened via ``even_group`` so the tail group is never
+    mostly padding. Group order inside the balancer result is preserved
+    verbatim — the scatter-add combine makes the output independent of
+    slot order, so the balanced schedule rides through unchanged.
+    """
+    B = ts.block_size
+    G = auto_group_size(B) if group_size is None else int(group_size)
+    if G < 1:
+        raise ValueError(f"group_size must be >= 1, got {G}")
+
+    tiles = np.asarray(ts.tiles)
+    brow = np.asarray(ts.brow)
+    bcol = np.asarray(ts.bcol)
+    nt = tiles.shape[0]
+    if nt:
+        _, Gt = even_group(nt, G)
+        bal = balance_mod.grid_group_balance(
+            np.count_nonzero(tiles, axis=(1, 2)).astype(np.int64), Gt
+        )
+        gt = bal.num_groups
+        s_tiles = np.zeros((gt, Gt * B, B), tiles.dtype)
+        s_brow = np.zeros((gt, Gt), np.int32)
+        s_bcol = np.zeros((gt, Gt), np.int32)
+        for s, blk in enumerate(bal.slots):
+            if blk < 0:
+                continue
+            g, slot = divmod(s, Gt)
+            s_tiles[g, slot * B : (slot + 1) * B, :] = tiles[blk]
+            s_brow[g, slot] = brow[blk]
+            s_bcol[g, slot] = bcol[blk]
+    else:
+        s_tiles = np.zeros((0, G * B, B), tiles.dtype)
+        s_brow = np.zeros((0, G), np.int32)
+        s_bcol = np.zeros((0, G), np.int32)
+
+    return SuperTileStream(
+        block_size=B, m=ts.m, n=ts.n, mb=ts.mb, nb=ts.nb, group_size=G,
+        tiles=s_tiles, brow=s_brow, bcol=s_bcol,
+    )
+
+
+def super_tile_stream_from_cb(
+    cb: CBMatrix, group_size: int | None = None
+) -> SuperTileStream:
+    """Full CB pipeline -> densified tiles -> balanced super-tile groups."""
+    return build_super_tile_stream(tile_stream_from_cb(cb),
+                                   group_size=group_size)

@@ -20,6 +20,12 @@ result — one deterministic combine instead of three.
     (only the host-side packer can shrink it), but it already buys the
     batching win: 1/G as many grid steps, G times the payload per DMA.
 
+``cb_spmm(stream, X)`` applies the same batched contract to the multi-RHS
+tile stream: ``SuperTileStream`` (host-packed, nnz-balanced) or
+``TileStream`` + ``group_size=`` (jit-side regroup), ONE ``pallas_call``
+for the whole stream, one fused scatter-add, and a lane-aligned
+activation tile width from ``spmm_block_n``.
+
 ``impl`` selects between the Pallas kernels ("pallas", interpret=True on
 CPU; compiled Mosaic on TPU) and the pure-XLA reference ("reference",
 kernels/ref.py) — the reference path is what the multi-pod dry-run lowers,
@@ -33,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.streams import (
-    SUBLANE, SpMVStreams, SuperBlockStreams, TileStream, even_group,
+    SUBLANE, SpMVStreams, SuperBlockStreams, SuperTileStream, TileStream,
+    even_group, spmm_block_n,
 )
 
 from . import cb_block_dense, cb_colagg, cb_coo, ref
@@ -229,30 +236,85 @@ def cb_spmv_into(
     return y2d.reshape(-1)[: sup.m]
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_n"))
+def _check_tile_group_size(stream, group_size) -> None:
+    """``cb_spmm``'s group-size contract (mirrors ``_check_group_size``)."""
+    if group_size is not None and group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    if isinstance(stream, SuperTileStream):
+        if group_size is not None and group_size != stream.group_size:
+            raise ValueError(
+                f"tile stream was packed with group_size={stream.group_size};"
+                f" cannot re-batch to {group_size} post hoc"
+            )
+
+
+def _regroup_tiles(ts: TileStream, G: int) -> SuperTileStream:
+    """Fuse G one-tile rows per super-tile row with pure reshapes.
+
+    The jit-safe analogue of ``build_super_tile_stream`` (no host round
+    trip, no balancing): padding rows appended to ragged tails carry a
+    zero tile and brow/bcol 0, so they DMA X block 0 and scatter-add
+    exact zeros.
+    """
+    B = ts.block_size
+    gt, Gt = even_group(ts.num_tiles, G)
+    tiles = _pad_rows(ts.tiles, gt * Gt).reshape(gt, Gt * B, B)
+    brow = _pad_rows(jnp.asarray(ts.brow), gt * Gt).reshape(gt, Gt)
+    bcol = _pad_rows(jnp.asarray(ts.bcol), gt * Gt).reshape(gt, Gt)
+    return SuperTileStream(
+        block_size=B, m=ts.m, n=ts.n, mb=ts.mb, nb=ts.nb, group_size=G,
+        tiles=tiles, brow=brow, bcol=bcol,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "interpret", "block_n", "group_size")
+)
 def cb_spmm(
-    stream: TileStream,
+    stream: TileStream | SuperTileStream,
     X: jax.Array,
     *,
     impl: str = "pallas",
     interpret: bool | None = None,
     block_n: int = 128,
+    group_size: int | None = None,
 ) -> jax.Array:
-    """Y = A @ X with A a block-dense tile stream. X: (n, N) -> Y: (m, N)."""
+    """Y = A @ X over the block-dense tile stream. X: (n, N) -> Y: (m, N).
+
+    Mirrors ``cb_spmv``'s batched contract: a ``SuperTileStream`` (from
+    ``build_super_tile_stream``) carries its group size from the
+    host-side nnz-balancing packer; a flat ``TileStream`` is regrouped
+    on the fly with pure reshapes when ``group_size=G`` is passed
+    (``G=None`` keeps one tile per grid step). Either way the whole
+    stream is ONE ``pallas_call`` whose per-slot partials are combined
+    by a single fused scatter-add over ``brow``.
+
+    The activation tile width is ``spmm_block_n(N, block_n)`` — always a
+    LANE multiple, with X zero-padded to match (the old
+    ``min(block_n, max(8, N))`` policy emitted lane-misaligned widths
+    that only interpret mode accepted). ``impl="reference"`` stays an
+    independent oracle on the layout as given (no regrouping).
+    """
+    _check_tile_group_size(stream, group_size)
     if impl == "reference":
+        if isinstance(stream, SuperTileStream):
+            return ref.super_spmm(stream, X)
         return ref.cb_spmm(stream, X)
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
+    sup = (stream if isinstance(stream, SuperTileStream)
+           else _regroup_tiles(stream, group_size or 1))
     interp = (not _on_tpu()) if interpret is None else interpret
 
-    B, mb, nb = stream.block_size, stream.mb, stream.nb
+    B, mb, nb = sup.block_size, sup.mb, sup.nb
     n, N = X.shape
-    bn = min(block_n, max(8, N))
+    bn = spmm_block_n(N, block_n)
     Npad = -(-N // bn) * bn
     Xp = jnp.pad(X, ((0, nb * B - n), (0, Npad - N)))
     Xb = Xp.reshape(nb, B, Npad)
-    Yb = _cb_spmm_kernel.tile_spmm(
-        stream.tiles, stream.brow, stream.bcol, Xb, mb,
-        block_n=bn, interpret=interp,
-    )
-    return Yb.reshape(mb * B, Npad)[: stream.m, :N]
+    part = _cb_spmm_kernel.super_tile_spmm(
+        sup.tiles, sup.bcol, Xb, block_n=bn, interpret=interp,
+    )                                                  # (gt, Gt, B, Npad)
+    Yb = jnp.zeros((mb, B, Npad), jnp.float32)
+    Yb = Yb.at[sup.brow.reshape(-1)].add(part.reshape(-1, B, Npad))
+    return Yb.reshape(mb * B, Npad)[: sup.m, :N]

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import coord_bits
-from repro.core.streams import SpMVStreams, SuperBlockStreams, TileStream
+from repro.core.streams import (
+    SpMVStreams, SuperBlockStreams, SuperTileStream, TileStream,
+)
 
 
 def _acc_dtype(*dts) -> jnp.dtype:
@@ -141,6 +143,28 @@ def cb_spmm(stream: TileStream, X: jax.Array) -> jax.Array:
     part = jnp.einsum("trc,tcn->trn", stream.tiles.astype(acc), Xb[stream.bcol])
     Y = jnp.zeros((mb, B, X.shape[1]), acc).at[stream.brow].add(part)
     return Y.reshape(mb * B, X.shape[1])[: stream.m]
+
+
+def super_spmm(s: SuperTileStream, X: jax.Array) -> jax.Array:
+    """CB-SpMM over packed super-tile groups — the batched ops contract.
+
+    Mirror of the batched kernel's math: each group slot is an
+    independent (B, B) @ (B, N) product routed by the ``brow``/``bcol``
+    slot maps; empty slots hold zero tiles, so they add exact zeros.
+    ``cb_spmm`` above stays the *unbatched* oracle — it never sees the
+    packed layout, so batched results are always checked against math
+    that never touched the batching code.
+    """
+    B, mb = s.block_size, s.mb
+    gt, Gt = s.brow.shape
+    acc = _acc_dtype(s.tiles.dtype, X.dtype)
+    n_pad = s.nb * B
+    Xp = jnp.pad(X.astype(acc), ((0, n_pad - X.shape[0]), (0, 0)))
+    Xb = Xp.reshape(s.nb, B, X.shape[1])
+    tiles = s.tiles.reshape(gt * Gt, B, B).astype(acc)
+    part = jnp.einsum("trc,tcn->trn", tiles, Xb[s.bcol.reshape(-1)])
+    Y = jnp.zeros((mb, B, X.shape[1]), acc).at[s.brow.reshape(-1)].add(part)
+    return Y.reshape(mb * B, X.shape[1])[: s.m]
 
 
 def cb_spmm_dense_equiv(stream: TileStream) -> jax.Array:

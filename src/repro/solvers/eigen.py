@@ -81,7 +81,8 @@ def power_iteration(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("degree", "iters", "impl", "interpret")
+    jax.jit,
+    static_argnames=("degree", "iters", "impl", "interpret", "group_size"),
 )
 def chebyshev_subspace(
     A: CBLinearOperator,
@@ -93,6 +94,7 @@ def chebyshev_subspace(
     iters: int = 5,
     impl: str = "pallas",
     interpret: bool | None = None,
+    group_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Chebyshev-filtered subspace iteration for the top of the spectrum.
 
@@ -101,9 +103,12 @@ def chebyshev_subspace(
     eigenvalues]). Returns ``(ritz_values (k,), ritz_vectors (n, k))``
     with values ascending — the largest eigenpairs of SPD ``A`` land at
     the end. Every matrix application is a multi-RHS ``matmat`` through
-    the CB-SpMM tile stream.
+    the batched CB-SpMM super-tile stream; ``group_size`` (static) is
+    asserted against the operator's plan-time packing, the same contract
+    as ``cb_spmv``.
     """
-    mm = lambda X: A.matmat(X, impl=impl, interpret=interpret)
+    mm = lambda X: A.matmat(X, impl=impl, interpret=interpret,
+                            group_size=group_size)
     e = (ub - lb) / 2.0
     c = (ub + lb) / 2.0
 

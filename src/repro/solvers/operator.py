@@ -11,8 +11,11 @@ jit-native applications afterwards:
   * ``rmatvec`` — ``A^T @ y`` through a *precomputed transposed* super
     stream (``streams.transpose_cb``): the transpose gets its own CB
     structure with formats/colagg/balance re-decided for A^T's sparsity;
-  * ``matmat``  — multi-RHS ``A @ X`` through the block-dense CB-SpMM
-    tile stream (subspace eigensolvers, blocked Krylov).
+  * ``matmat``  — multi-RHS ``A @ X`` through the *batched* CB-SpMM
+    super-tile stream (subspace eigensolvers, blocked Krylov): tiles are
+    packed ``group_size`` per grid step by the same Alg. 2 balancer as
+    ``matvec``'s streams, so one ``pallas_call`` sweeps the whole
+    weight stream per application.
 
 Trace-time-constant discipline (same contract as ``sparse/linear.py``):
 the operator is a registered pytree whose array leaves are the stream
@@ -30,10 +33,10 @@ import jax.numpy as jnp
 from repro.core.cb_matrix import CBMatrix
 from repro.core.streams import (
     SuperBlockStreams,
-    TileStream,
+    SuperTileStream,
     build_super_streams,
     build_transposed_super_streams,
-    tile_stream_from_cb,
+    super_tile_stream_from_cb,
 )
 from repro.kernels import ops
 
@@ -55,7 +58,7 @@ class CBLinearOperator:
     # -- data leaves -----------------------------------------------------
     streams: SuperBlockStreams
     streams_T: SuperBlockStreams | None = None
-    tiles: TileStream | None = None
+    tiles: SuperTileStream | None = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -71,9 +74,11 @@ class CBLinearOperator:
 
         Capabilities are pay-for-what-you-ask: ``rmatvec`` costs a full
         second CB pipeline on the transposed triplets and ``matmat``
-        densifies every block into SpMM tiles, so both default OFF — a
-        plain CG/power-iteration operator should not triple its plan
-        time (and skew the amortization story) for paths it never runs.
+        densifies every block into balanced SpMM super-tiles, so both
+        default OFF — a plain CG/power-iteration operator should not
+        triple its plan time (and skew the amortization story) for paths
+        it never runs. ``group_size`` is shared by every stream built
+        here, so matvec and matmat amortize per-step overhead alike.
         """
         return cls(
             shape=tuple(cb.shape),
@@ -82,7 +87,8 @@ class CBLinearOperator:
             streams=build_super_streams(cb, group_size=group_size),
             streams_T=(build_transposed_super_streams(cb, group_size=group_size)
                        if with_rmatvec else None),
-            tiles=tile_stream_from_cb(cb) if with_matmat else None,
+            tiles=(super_tile_stream_from_cb(cb, group_size=group_size)
+                   if with_matmat else None),
         )
 
     # ------------------------------------------------------------------
@@ -118,15 +124,21 @@ class CBLinearOperator:
 
     def matmat(self, X: jax.Array, *, impl: str = "pallas",
                interpret: bool | None = None,
-               block_n: int = 128) -> jax.Array:
-        """``A @ X`` — X: (n, N) -> (m, N) via the CB-SpMM tile stream."""
+               block_n: int = 128,
+               group_size: int | None = None) -> jax.Array:
+        """``A @ X`` — X: (n, N) -> (m, N) via the batched SpMM stream.
+
+        ``group_size`` is baked into the super-tile stream at plan time;
+        passing it here is only a consistency assertion (ops.cb_spmm
+        rejects a conflicting value), mirroring ``cb_spmv``'s contract.
+        """
         if self.tiles is None:
             raise ValueError(
                 "operator was built with with_matmat=False; rebuild with "
                 "CBLinearOperator.from_cb(cb, with_matmat=True)"
             )
         return ops.cb_spmm(self.tiles, X, impl=impl, interpret=interpret,
-                           block_n=block_n)
+                           block_n=block_n, group_size=group_size)
 
 
 jax.tree_util.register_dataclass(

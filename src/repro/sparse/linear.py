@@ -19,6 +19,7 @@ so that ``y^T = A @ x^T`` matches the kernels' row-major SpMM contract.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any
 
 import jax
@@ -30,9 +31,15 @@ from repro.core.streams import TileStream, build_tile_stream
 from .prune import block_sparsity_pattern
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class CBLinearSpec:
-    """Static sparsity structure of one CB linear layer."""
+    """Static sparsity structure of one CB linear layer.
+
+    ``eq=False`` keeps object-identity hashing (the numpy fields are
+    unhashable anyway), which is what lets the matmul cache key on the
+    spec itself through a ``WeakKeyDictionary`` — dropped specs evict
+    their cached closures instead of accumulating forever.
+    """
 
     in_features: int
     out_features: int
@@ -171,47 +178,49 @@ def cb_linear_init(
     return params, spec
 
 
-def _stream_of(spec: CBLinearSpec, tiles: jax.Array) -> TileStream:
-    # NOTE: metadata stays numpy — creating jnp constants here would bind
-    # them to whatever trace is active (this runs inside scan/grad traces).
-    B = spec.block_size
-    return TileStream(
-        block_size=B, m=spec.out_features, n=spec.in_features,
-        mb=spec.mb, nb=spec.nb,
-        tiles=tiles, brow=spec.brow, bcol=spec.bcol,
-    )
-
-
-def _stream_of_T(spec: CBLinearSpec, tiles: jax.Array) -> TileStream:
-    B = spec.block_size
-    safe = np.maximum(spec.t_perm, 0)
-    tilesT = jnp.swapaxes(tiles[safe], -1, -2)
-    tilesT = jnp.where((spec.t_perm >= 0)[:, None, None], tilesT, 0.0)
-    return TileStream(
-        block_size=B, m=spec.in_features, n=spec.out_features,
-        mb=spec.nb, nb=spec.mb,
-        tiles=tilesT, brow=spec.browT, bcol=spec.bcolT,
-    )
-
-
 def make_cb_matmul(spec: CBLinearSpec, impl: str = "reference",
-                   interpret: bool | None = None):
+                   interpret: bool | None = None,
+                   group_size: int | None = None):
     """Build the differentiable ``(tiles, X) -> A @ X`` for this spec.
 
     X: (in, N) -> Y: (out, N). The VJP's dX runs A^T's stream (same kernel,
     transposed metadata); dW gathers (dY block-row, X block-col) pairs and
     contracts per tile — both pure-XLA, so the backward pass is collective-
-    and layout-friendly under GSPMD.
+    and layout-friendly under GSPMD. ``group_size`` rides through BOTH
+    SpMM streams (forward and the transposed dX stream) as a jit-side
+    regroup — a schedule change only, so gradients stay bit-identical to
+    the unbatched path's on the reference impl and allclose on Pallas.
+
+    The returned closure captures the spec's *fields*, never the spec
+    object, so the weakref-keyed matmul cache can evict entries once the
+    caller drops the spec (a closure holding the key would pin it
+    forever).
     """
     from repro.kernels import ops
 
     B = spec.block_size
-    brow = spec.brow  # numpy on purpose — see _stream_of
+    # NOTE: metadata stays numpy — creating jnp constants here would bind
+    # them to whatever trace is active (this runs inside scan/grad traces).
+    brow = spec.brow
     bcol = spec.bcol
+    mb, nb = spec.mb, spec.nb
+    in_f, out_f = spec.in_features, spec.out_features
+    t_perm, browT, bcolT = spec.t_perm, spec.browT, spec.bcolT
+
+    def _stream(tiles):
+        return TileStream(block_size=B, m=out_f, n=in_f, mb=mb, nb=nb,
+                          tiles=tiles, brow=brow, bcol=bcol)
+
+    def _stream_T(tiles):
+        safe = np.maximum(t_perm, 0)
+        tilesT = jnp.swapaxes(tiles[safe], -1, -2)
+        tilesT = jnp.where((t_perm >= 0)[:, None, None], tilesT, 0.0)
+        return TileStream(block_size=B, m=in_f, n=out_f, mb=nb, nb=mb,
+                          tiles=tilesT, brow=browT, bcol=bcolT)
 
     def fwd_compute(tiles, X):
-        return ops.cb_spmm(_stream_of(spec, tiles), X, impl=impl,
-                           interpret=interpret)
+        return ops.cb_spmm(_stream(tiles), X, impl=impl,
+                           interpret=interpret, group_size=group_size)
 
     @jax.custom_vjp
     def matmul(tiles, X):
@@ -224,14 +233,15 @@ def make_cb_matmul(spec: CBLinearSpec, impl: str = "reference",
         tiles, X = res
         dY = dY.astype(jnp.float32)
         # dX = A^T @ dY via the transposed stream (same SpMM kernel).
-        dX = ops.cb_spmm(_stream_of_T(spec, tiles), dY, impl=impl,
-                         interpret=interpret).astype(X.dtype)
+        dX = ops.cb_spmm(_stream_T(tiles), dY, impl=impl,
+                         interpret=interpret,
+                         group_size=group_size).astype(X.dtype)
         # dA[t] = dY_blocks[brow[t]] @ X_blocks[bcol[t]]^T
         N = X.shape[1]
-        Xp = jnp.pad(X.astype(jnp.float32), ((0, spec.nb * B - X.shape[0]), (0, 0)))
-        dYp = jnp.pad(dY, ((0, spec.mb * B - dY.shape[0]), (0, 0)))
-        Xb = Xp.reshape(spec.nb, B, N)
-        dYb = dYp.reshape(spec.mb, B, N)
+        Xp = jnp.pad(X.astype(jnp.float32), ((0, nb * B - X.shape[0]), (0, 0)))
+        dYp = jnp.pad(dY, ((0, mb * B - dY.shape[0]), (0, 0)))
+        Xb = Xp.reshape(nb, B, N)
+        dYb = dYp.reshape(mb, B, N)
         d_tiles = jnp.einsum("tbn,tcn->tbc", dYb[brow], Xb[bcol])
         return d_tiles.astype(tiles.dtype), dX
 
@@ -241,17 +251,27 @@ def make_cb_matmul(spec: CBLinearSpec, impl: str = "reference",
 
 # custom_vjp closures must be constructed OUTSIDE any trace (constructing
 # them inside a scanned/grad-traced body leaks trace-local constants into
-# the later-staged bwd jaxpr). Cache one matmul per (spec identity, impl).
-_MATMUL_CACHE: dict = {}
+# the later-staged bwd jaxpr). Cache one matmul per spec per config — the
+# spec is the weak key (identity hash, see CBLinearSpec), so entries die
+# with the spec instead of keeping every spec ever built alive, which is
+# what the old ``id(spec)``-keyed dict deliberately (and unboundedly) did.
+_MATMUL_CACHE: "weakref.WeakKeyDictionary[CBLinearSpec, dict]" = (
+    weakref.WeakKeyDictionary()
+)
 
 
-def _cached_matmul(spec: CBLinearSpec, impl: str, interpret: bool | None):
-    key = (id(spec), impl, interpret)
-    hit = _MATMUL_CACHE.get(key)
+def _cached_matmul(spec: CBLinearSpec, impl: str, interpret: bool | None,
+                   group_size: int | None = None):
+    per_spec = _MATMUL_CACHE.get(spec)
+    if per_spec is None:
+        per_spec = _MATMUL_CACHE[spec] = {}
+    key = (impl, interpret, group_size)
+    hit = per_spec.get(key)
     if hit is None:
-        hit = (make_cb_matmul(spec, impl=impl, interpret=interpret), spec)
-        _MATMUL_CACHE[key] = hit  # spec kept alive so id() stays unique
-    return hit[0]
+        hit = per_spec[key] = make_cb_matmul(
+            spec, impl=impl, interpret=interpret, group_size=group_size
+        )
+    return hit
 
 
 def cb_linear_apply(
@@ -261,9 +281,10 @@ def cb_linear_apply(
     *,
     impl: str = "reference",
     interpret: bool | None = None,
+    group_size: int | None = None,
 ) -> jax.Array:
     """y = x @ W for x of shape (..., in_features)."""
-    matmul = _cached_matmul(spec, impl, interpret)
+    matmul = _cached_matmul(spec, impl, interpret, group_size)
     lead = x.shape[:-1]
     X = x.reshape(-1, spec.in_features).T  # (in, N)
     Y = matmul(params["tiles"], X)         # (out, N)

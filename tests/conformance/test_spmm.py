@@ -1,13 +1,27 @@
-"""SpMM conformance: tile-stream path, reference vs Pallas, plus the
-full-CB densification path (``tile_stream_from_cb``)."""
+"""SpMM conformance: tile-stream path, reference vs Pallas, the full-CB
+densification path (``tile_stream_from_cb``), and the batched super-tile
+engine (host-packed / jit-regrouped / reference, G ∈ {1, 4, 16}, odd
+activation widths, bf16 tiles, packing bit-equality)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.streams import build_tile_stream, tile_stream_from_cb
+from repro.core.streams import (
+    LANE,
+    build_super_tile_stream,
+    build_tile_stream,
+    spmm_block_n,
+    tile_stream_from_cb,
+)
+import importlib
+
 from repro.data import matrices
 from repro.kernels import ops
+
+# the package re-exports ops.cb_spmm under the kernel module's name, so
+# reach the module itself through importlib
+cb_spmm_kernel = importlib.import_module("repro.kernels.cb_spmm")
 
 from .scenarios import Scenario, scenario_ids
 
@@ -68,3 +82,243 @@ def test_cb_densified_spmm_matches_dense(scn):
         )
         np.testing.assert_allclose(got, expected, rtol=3e-4, atol=3e-4,
                                    err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# batched super-tile engine
+# ---------------------------------------------------------------------------
+
+# Odd activation widths straddling the 128-lane tile: 1 (degenerate),
+# 20 (sub-lane), 100 (the historical misaligned pick), 129 (lane + 1).
+ODD_NS = (1, 20, 100, 129)
+
+SPMM_BATCHED = [
+    (scn, G, ODD_NS[(i + gi) % len(ODD_NS)])
+    for gi, G in enumerate((1, 4, 16))
+    for i, scn in enumerate(SPMM_CB_SCENARIOS)
+]
+
+
+@pytest.mark.parametrize(
+    "scn,G,N", SPMM_BATCHED,
+    ids=[f"{s.name}-G{g}-N{n}" for s, g, n in SPMM_BATCHED],
+)
+def test_batched_spmm_agrees_with_unbatched_reference(scn, G, N):
+    """Host-packed, jit-regrouped, and super reference all ≤1e-5 vs the
+    flat ``ref.cb_spmm`` oracle — batching is a schedule change, never a
+    numerics change (same contract as the SpMV engine)."""
+    rows, cols, vals, shape = scn.build_coo()
+    cb = scn.build()
+    ts = jax.tree_util.tree_map(jnp.asarray, tile_stream_from_cb(cb))
+    sts = jax.tree_util.tree_map(
+        jnp.asarray, build_super_tile_stream(tile_stream_from_cb(cb), G)
+    )
+    X = np.random.default_rng(7).standard_normal(
+        (shape[1], N)
+    ).astype(np.float32)
+    Xj = jnp.asarray(X)
+
+    y_ref = np.asarray(ops.cb_spmm(ts, Xj, impl="reference"))
+    y_packed = np.asarray(ops.cb_spmm(sts, Xj, impl="pallas", interpret=True))
+    y_regroup = np.asarray(
+        ops.cb_spmm(ts, Xj, impl="pallas", interpret=True, group_size=G)
+    )
+    y_super_ref = np.asarray(ops.cb_spmm(sts, Xj, impl="reference"))
+
+    np.testing.assert_allclose(y_packed, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_regroup, y_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y_super_ref, y_ref, rtol=1e-5, atol=1e-5)
+
+    expected = _dense_of(rows, cols, vals.astype(np.float32), shape) @ X
+    np.testing.assert_allclose(y_packed, expected, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B", [8, 16])
+@pytest.mark.parametrize("G", [4, 16])
+def test_batched_spmm_bf16_tiles(B, G):
+    """bf16 weight tiles through the batched path: the kernel and the
+    reference both cast tile values to f32 before the MXU dot, so they
+    stay within 1e-5 of each other on the same bf16 stream."""
+    m, n = 120, 104
+    r, c, v = matrices.pruned_weight(m, n, block_size=B, seed=9)
+    ts = build_tile_stream(r, c, v.astype(np.float32), (m, n), B)
+    ts_bf16 = jax.tree_util.tree_map(jnp.asarray, ts)
+    ts_bf16.tiles = ts_bf16.tiles.astype(jnp.bfloat16)
+    sts = build_super_tile_stream(
+        jax.tree_util.tree_map(np.asarray, ts_bf16), G
+    )
+    assert np.asarray(sts.tiles).dtype == np.asarray(ts_bf16.tiles).dtype
+    sts = jax.tree_util.tree_map(jnp.asarray, sts)
+    X = jnp.asarray(
+        np.random.default_rng(3).standard_normal((n, 20)), jnp.float32
+    )
+    y_ref = np.asarray(ops.cb_spmm(ts_bf16, X, impl="reference"))
+    y_packed = np.asarray(ops.cb_spmm(sts, X, impl="pallas", interpret=True))
+    np.testing.assert_allclose(y_packed, y_ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B", [8, 16, 24])
+def test_batched_spmm_packing_bit_equality(B):
+    """Integer-exact data: every grouping (flat, jit-regroup, host-packed)
+    must be BIT-identical — reordering exact sums cannot change a ULP, so
+    any difference is a lost/duplicated/misrouted tile."""
+    rng = np.random.default_rng(B)
+    m, n = 136, 120
+    nnz = 700
+    r = rng.integers(0, m, nnz)
+    c = rng.integers(0, n, nnz)
+    key = r * n + c
+    _, idx = np.unique(key, return_index=True)
+    r, c = r[idx], c[idx]
+    v = rng.integers(1, 8, len(r)).astype(np.float32)
+    X = rng.integers(-4, 5, (n, 20)).astype(np.float32)
+
+    ts = build_tile_stream(r, c, v, (m, n), B)
+    tsd = jax.tree_util.tree_map(jnp.asarray, ts)
+    Xj = jnp.asarray(X)
+    y_flat = np.asarray(ops.cb_spmm(tsd, Xj, impl="pallas", interpret=True))
+    for G in (1, 4, 16):
+        sts = jax.tree_util.tree_map(
+            jnp.asarray, build_super_tile_stream(ts, G)
+        )
+        y_packed = np.asarray(
+            ops.cb_spmm(sts, Xj, impl="pallas", interpret=True)
+        )
+        y_regroup = np.asarray(
+            ops.cb_spmm(tsd, Xj, impl="pallas", interpret=True, group_size=G)
+        )
+        np.testing.assert_array_equal(y_packed, y_flat, err_msg=f"G={G}")
+        np.testing.assert_array_equal(y_regroup, y_flat, err_msg=f"G={G}")
+
+
+def test_super_tile_packing_invariants():
+    """Structure of the packed stream, independent of numerics."""
+    scn = Scenario("power_law", 16, "auto")
+    ts = tile_stream_from_cb(scn.build())
+    for G in (1, 4, 16):
+        sts = build_super_tile_stream(ts, G)
+        assert sts.group_size == G
+        assert sts.brow.shape == sts.bcol.shape == (sts.num_groups, sts.slots)
+        assert sts.num_groups * sts.slots >= ts.num_tiles
+        # value mass conserved exactly (permutation, never arithmetic)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(sts.tiles).ravel()[
+                np.asarray(sts.tiles).ravel() != 0]),
+            np.sort(np.asarray(ts.tiles).ravel()[
+                np.asarray(ts.tiles).ravel() != 0]),
+        )
+        assert np.asarray(sts.brow).max() < ts.mb
+        assert np.asarray(sts.bcol).max() < ts.nb
+
+
+# ---------------------------------------------------------------------------
+# canonical (brow, bcol) ordering: both builders, bit-identical streams
+# ---------------------------------------------------------------------------
+
+BUILDER_SCENARIOS = [
+    Scenario("banded", 8, False),
+    Scenario("uniform", 16, False),
+    Scenario("uniform", 16, True),
+    Scenario("ragged_tail", 24, False),
+    Scenario("empty_rows_cols", 16, "auto"),
+]
+
+
+@pytest.mark.parametrize(
+    "scn", BUILDER_SCENARIOS, ids=scenario_ids(BUILDER_SCENARIOS)
+)
+def test_tile_stream_builders_bit_identical(scn):
+    """``build_tile_stream`` (raw COO) and ``tile_stream_from_cb`` (full
+    CB pipeline, colagg folded back) must emit the SAME stream: canonical
+    (brow, bcol) order, identical tiles to the bit. Historically the COO
+    builder sorted by brow only while the CB builder sorted by
+    (brow, bcol) — the streams held the same tiles in different orders.
+    """
+    rows, cols, vals, shape = scn.build_coo()
+    ts_coo = build_tile_stream(
+        rows, cols, vals.astype(np.float32), shape, scn.block_size
+    )
+    ts_cb = tile_stream_from_cb(scn.build())
+    np.testing.assert_array_equal(np.asarray(ts_coo.brow),
+                                  np.asarray(ts_cb.brow))
+    np.testing.assert_array_equal(np.asarray(ts_coo.bcol),
+                                  np.asarray(ts_cb.bcol))
+    np.testing.assert_array_equal(np.asarray(ts_coo.tiles),
+                                  np.asarray(ts_cb.tiles))
+    # canonical order: strictly increasing (brow, bcol) pairs
+    keys = (np.asarray(ts_coo.brow).astype(np.int64) * ts_coo.nb
+            + np.asarray(ts_coo.bcol))
+    assert np.all(np.diff(keys) > 0)
+
+
+# ---------------------------------------------------------------------------
+# lane-alignment regression (the compiled-shape invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N", ODD_NS)
+def test_spmm_block_n_is_lane_multiple(N):
+    """``spmm_block_n`` must emit a LANE (128) multiple for every N —
+    the compiled Mosaic pipeline rejects lane-misaligned block widths;
+    the old ``min(block_n, max(8, N))`` policy handed N=100 straight
+    through and only survived because tests run interpreted."""
+    bn = spmm_block_n(N)
+    assert bn % LANE == 0
+    assert spmm_block_n(N, 256) % LANE == 0
+
+
+def test_spmm_block_n_validates_block_n():
+    with pytest.raises(ValueError, match="multiple of 128"):
+        spmm_block_n(100, block_n=100)
+    with pytest.raises(ValueError, match="multiple of 128"):
+        cb_spmm_kernel.super_tile_spmm(
+            jnp.zeros((1, 8, 8), jnp.float32),
+            jnp.zeros((1, 1), jnp.int32),
+            jnp.zeros((1, 8, 100), jnp.float32),
+            block_n=100, interpret=True,
+        )
+
+
+@pytest.mark.parametrize("N", ODD_NS)
+def test_spmm_odd_widths_end_to_end(N):
+    """The full entry point at every odd width: the kernel must see a
+    lane-aligned tile and the result must still match dense math."""
+    B, m, n = 16, 96, 80
+    r, c, v = matrices.pruned_weight(m, n, block_size=B, seed=1)
+    ts = jax.tree_util.tree_map(
+        jnp.asarray, build_tile_stream(r, c, v.astype(np.float32), (m, n), B)
+    )
+    X = np.random.default_rng(N).standard_normal((n, N)).astype(np.float32)
+    got = np.asarray(
+        ops.cb_spmm(ts, jnp.asarray(X), impl="pallas", interpret=True,
+                    group_size=4)
+    )
+    assert got.shape == (m, N)
+    np.testing.assert_allclose(
+        got, _dense_of(r, c, v, (m, n)) @ X, rtol=3e-4, atol=3e-4
+    )
+
+
+def test_spmm_single_pallas_call_per_stream(monkeypatch):
+    """At group_size > 1 the whole tile stream is ONE ``pallas_call``
+    whose grid has ``ceil(nt / G)`` steps per n-tile — the batching
+    claim, asserted at the call boundary."""
+    calls = []
+    real = cb_spmm_kernel.pallas_call_tpu
+
+    def spy(kernel, **kwargs):
+        calls.append(kwargs["grid_spec"].grid)
+        return real(kernel, **kwargs)
+
+    monkeypatch.setattr(cb_spmm_kernel, "pallas_call_tpu", spy)
+    B, m, n = 8, 104, 88   # unique shape so the jit cache cannot elide
+    r, c, v = matrices.pruned_weight(m, n, block_size=B, seed=2)
+    ts = build_tile_stream(r, c, v.astype(np.float32), (m, n), B)
+    sts = jax.tree_util.tree_map(jnp.asarray, build_super_tile_stream(ts, 4))
+    X = jnp.asarray(
+        np.random.default_rng(0).standard_normal((n, 150)), jnp.float32
+    )
+    ops.cb_spmm(sts, X, impl="pallas", interpret=True).block_until_ready()
+    assert len(calls) == 1
+    (grid,) = calls
+    assert grid == (2, sts.num_groups)          # ceil(150/128) n-tiles
+    assert sts.num_groups * 4 <= ts.num_tiles + 4  # >= 4x fewer steps

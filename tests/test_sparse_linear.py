@@ -90,6 +90,59 @@ def test_block_pruning_properties():
     block_magnitude_prune(w, 16, 0.25)  # smoke: dense path runs
 
 
+@pytest.mark.parametrize("G", [1, 4])
+def test_forward_and_grads_with_group_size(G):
+    """group_size rides through BOTH VJP streams (forward and transposed
+    dX) as a schedule change only: pallas-batched gradients match the
+    unbatched reference path's bit for bit on this integer-friendly size,
+    and to float tolerance in general."""
+    params, spec = L.cb_linear_init(
+        jax.random.PRNGKey(0), 96, 64, block_size=16, keep_fraction=0.4
+    )
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 96))
+
+    def loss(impl, group_size):
+        return lambda t: jnp.sum(jnp.sin(L.cb_linear_apply(
+            {"tiles": t}, spec, x, impl=impl, interpret=True,
+            group_size=group_size,
+        )))
+
+    y_ref = L.cb_linear_apply(params, spec, x, impl="reference")
+    y_b = L.cb_linear_apply(params, spec, x, impl="pallas", interpret=True,
+                            group_size=G)
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    g_ref = jax.grad(loss("reference", None))(params["tiles"])
+    # the reference path ignores grouping entirely — bit-identical
+    g_ref_g = jax.grad(loss("reference", G))(params["tiles"])
+    np.testing.assert_array_equal(np.asarray(g_ref), np.asarray(g_ref_g))
+    g_b = jax.grad(loss("pallas", G))(params["tiles"])
+    np.testing.assert_allclose(np.asarray(g_b), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_cache_drops_dead_specs():
+    """The matmul cache must not pin every spec ever built (the old
+    id()-keyed dict did, deliberately and unboundedly)."""
+    import gc
+
+    before = len(L._MATMUL_CACHE)
+    specs = [
+        L.cb_spec_random(64, 64, block_size=16, keep_fraction=0.5, seed=s)
+        for s in range(12)
+    ]
+    for spec in specs:
+        L._cached_matmul(spec, "reference", None)
+        assert L._cached_matmul(spec, "reference", None) is (
+            L._cached_matmul(spec, "reference", None)
+        )  # hit path: same closure back
+    assert len(L._MATMUL_CACHE) >= before + 12
+    del specs, spec  # the loop variable pins the last spec otherwise
+    gc.collect()
+    assert len(L._MATMUL_CACHE) <= before
+
+
 def test_spec_random_structural():
     spec = L.cb_spec_random(256, 128, block_size=32, keep_fraction=0.5, seed=1)
     assert spec.mb == 4 and spec.nb == 8
