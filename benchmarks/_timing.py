@@ -1,24 +1,10 @@
-"""Shared measurement helpers for the benchmark sections."""
+"""Shared measurement helpers for the benchmark sections.
+
+The implementations live in ``repro.autotune.timing`` so the autotuner's
+empirical refinement and the benchmark sections share one timing
+discipline; this module re-exports them for the sections' existing
+imports.
+"""
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-
-def time_min(fn, *args, reps=15):
-    """Min of individually-timed calls (two warmups first): robust to
-    scheduler noise at the microsecond scales the small matrices produce
-    on a shared box."""
-    fn(*args).block_until_ready()
-    fn(*args).block_until_ready()
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn(*args).block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
-def geomean(xs) -> float:
-    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+from repro.autotune.timing import geomean, time_min  # noqa: F401

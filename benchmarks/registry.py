@@ -1,0 +1,101 @@
+"""Single data-driven registry of benchmark sections + their guard schemas.
+
+One ``Section`` record per benchmark: the human title and runner module
+consumed by ``benchmarks/run.py``, and the *declarative* guard schema
+consumed by ``scripts/bench_guard.py`` — required row keys, per-row
+minimum bounds, machine-independent timing-ratio pairs, keys that must
+be ``True``, and geomean upper bounds between two row keys. PRs 2-4
+each grew a copy-pasted per-section block in both files; new sections
+now add exactly one record here.
+
+This module is imported by the standalone guard script, so it must stay
+dependency-free (no jax/numpy): runner modules are resolved lazily by
+name via :func:`runner`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Section:
+    """One benchmark section and its guard contract."""
+
+    title: str
+    module: str                  # dotted module with a ``main(scale)`` entry
+    # -- guard schema (all optional; empty = section is not guarded) ------
+    required_keys: tuple = ()    # every row must carry these, finite
+    timing_pairs: tuple = ()     # (num, den): relative drift vs baseline
+    require_true: tuple = ()     # row keys that must be exactly True
+    min_values: tuple = ()       # (key, bound): row[key] >= bound
+    geomean_max: tuple = ()      # (num, den, bound): geomean(num/den) <= bound
+
+    @property
+    def guarded(self) -> bool:
+        return bool(self.required_keys)
+
+
+_BATCH_KEYS = (
+    "matrix", "nnz", "group_size", "steps_unbatched", "steps_batched",
+    "padded_elems_unbatched", "padded_elems_batched",
+    "padded_ratio_unbatched", "padded_ratio_batched",
+    "t_unbatched", "t_batched",
+)
+
+SECTIONS: dict[str, Section] = {
+    "fig9": Section("Fig. 9 — SpMV perf vs CSR/COO/BSR",
+                    "benchmarks.fig9_perf"),
+    "fig10": Section("Fig. 10 — cache hit-rate model",
+                     "benchmarks.fig10_locality"),
+    "fig11": Section("Fig. 11 — ablation CB-I/II/III",
+                     "benchmarks.fig11_ablation"),
+    "fig12": Section("Fig. 12 — storage + preprocessing",
+                     "benchmarks.fig12_overhead"),
+    "fig34": Section("Fig. 3/4 — distribution + balance",
+                     "benchmarks.fig34_distribution"),
+    "spmv_batch": Section(
+        "Batched super-block engine vs unbatched",
+        "benchmarks.spmv_batch",
+        required_keys=_BATCH_KEYS,
+        timing_pairs=(("t_batched", "t_unbatched"),
+                      ("t_ref_batched", "t_ref_unbatched")),
+    ),
+    # the SpMM section mirrors spmv_batch's schema exactly (same batched-
+    # engine claims: step shrink, padded weight stream, kernel-path timing)
+    "spmm": Section(
+        "Batched SpMM super-tile engine vs flat tile stream",
+        "benchmarks.spmm_batch",
+        required_keys=_BATCH_KEYS,
+        timing_pairs=(("t_batched", "t_unbatched"),
+                      ("t_ref_batched", "t_ref_unbatched")),
+    ),
+    "solvers": Section(
+        "Iterative solvers vs scipy.sparse CPU reference",
+        "benchmarks.solvers",
+        required_keys=("matrix", "solver", "n", "nnz", "iters_to_tol",
+                       "iters_ref", "converged", "t_per_iter",
+                       "t_ref_per_iter"),
+        timing_pairs=(("t_per_iter", "t_ref_per_iter"),),
+        require_true=("converged",),
+    ),
+    "autotune": Section(
+        "Autotuned plans vs default constants (cost model + cache)",
+        "benchmarks.autotune_bench",
+        required_keys=(
+            "matrix", "nnz", "block_size_planned", "group_size_planned",
+            "steps_default", "steps_planned",
+            "predicted_padded_elems", "predicted_steps",
+            "padded_elems_default", "padded_elems_planned",
+            "plan_hit_rate",
+        ),
+        min_values=(("plan_hit_rate", 0.5),),
+        # the acceptance bar: tuned plans never regress padded work
+        geomean_max=(("padded_elems_planned", "padded_elems_default", 1.0),),
+    ),
+}
+
+
+def runner(name: str):
+    """Resolve a section's ``main(scale)`` runner (lazy import)."""
+    return importlib.import_module(SECTIONS[name].module).main

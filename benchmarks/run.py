@@ -4,17 +4,21 @@
                                             [--only fig9,spmv_batch,...]
                                             [--json BENCH_spmv.json]
 
-``--json`` writes every executed section's row dicts (timings, bytes,
-padded-work ratios) to one machine-readable file so the perf trajectory
-is tracked across PRs; ``scripts/bench_guard.py`` diffs such a file
-against the checked-in ``benchmarks/BENCH_spmv.json`` baseline.
+Sections, titles, runner modules, and guard schemas all live in ONE
+place — ``benchmarks/registry.py`` — consumed here and by
+``scripts/bench_guard.py``. ``--json`` writes every executed section's
+row dicts (timings, bytes, padded-work ratios) to one machine-readable
+file so the perf trajectory is tracked across PRs; the guard script
+diffs such a file against the checked-in ``benchmarks/BENCH_spmv.json``
+baseline.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
+
+from .registry import SECTIONS, runner
 
 
 def _jsonable(obj):
@@ -36,35 +40,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
     ap.add_argument("--only", default=None,
-                    help="comma list: fig9,fig10,fig11,fig12,fig34,"
-                         "spmv_batch,spmm,solvers")
+                    help="comma list: " + ",".join(SECTIONS))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write executed sections' rows to PATH as JSON")
     args = ap.parse_args()
 
-    from . import fig9_perf, fig10_locality, fig11_ablation, fig12_overhead
-    from . import fig34_distribution, solvers, spmm_batch, spmv_batch
+    chosen = args.only.split(",") if args.only else list(SECTIONS)
+    unknown = [k for k in chosen if k not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; known: {','.join(SECTIONS)}")
 
-    sections = {
-        "fig9": ("Fig. 9 — SpMV perf vs CSR/COO/BSR", fig9_perf.main),
-        "fig10": ("Fig. 10 — cache hit-rate model", fig10_locality.main),
-        "fig11": ("Fig. 11 — ablation CB-I/II/III", fig11_ablation.main),
-        "fig12": ("Fig. 12 — storage + preprocessing", fig12_overhead.main),
-        "fig34": ("Fig. 3/4 — distribution + balance", fig34_distribution.main),
-        "spmv_batch": ("Batched super-block engine vs unbatched",
-                       spmv_batch.main),
-        "spmm": ("Batched SpMM super-tile engine vs flat tile stream",
-                 spmm_batch.main),
-        "solvers": ("Iterative solvers vs scipy.sparse CPU reference",
-                    solvers.main),
-    }
-    chosen = args.only.split(",") if args.only else list(sections)
     results: dict[str, object] = {}
     for key in chosen:
-        title, fn = sections[key]
-        print(f"\n===== {title} =====", flush=True)
+        print(f"\n===== {SECTIONS[key].title} =====", flush=True)
         t0 = time.time()
-        rows = fn(args.scale)
+        rows = runner(key)(args.scale)
         results[key] = _jsonable(rows)
         print(f"[{key} done in {time.time() - t0:.1f}s]", flush=True)
 

@@ -3,24 +3,26 @@
 
     python scripts/bench_guard.py NEW.json [BASELINE.json]
 
-Two checks, both cheap enough for every CI run:
+Guard schemas are *data*, declared once per section in
+``benchmarks/registry.py`` (required keys, timing-ratio pairs, must-be-
+true keys, per-row minimums, geomean bounds) — this script only
+interprets them. Two checks, both cheap enough for every CI run:
 
-  * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output,
-    every ``spmv_batch``/``spmm``/``solvers`` row carries its required,
-    finite metrics, and every solver row converged;
-  * **regression** — deterministic metrics (``padded_*``, ``steps_*``)
-    are compared row by row against the baseline (a 2x jump is always a
-    genuine packing bug). Timings are guarded as the **batched /
-    unbatched ratio**, geomean'd across matched rows, compared against
-    the same ratio in the baseline — machine speed cancels out, so the
-    checked-in baseline stays valid on any box; a 2x relative drift
-    means batching itself got slower, not the machine. The ``solvers``
-    section is guarded through its ``t_per_iter / t_ref_per_iter``
-    ratio (jit solver vs scipy on the same box) — raw machine speed
-    cancels, though the JAX-dispatch-vs-scipy overhead balance can
-    still shift across toolchain upgrades, so regenerate the baseline
-    when bumping either. Absolute wall times are never compared across
-    machines. (Real perf gating needs TPU hardware — see ROADMAP.)
+  * **schema** — the file is well-formed ``cb-spmv-bench/v1`` output and
+    every guarded section's rows satisfy their declared contract: the
+    required metrics present and finite, ``require_true`` keys true
+    (e.g. every solver row converged), ``min_values`` bounds held (e.g.
+    the plan-cache hit rate), and ``geomean_max`` bounds held (e.g.
+    autotuned padded work <= the default-constants baseline).
+  * **regression** — deterministic metrics (``padded_*``, ``steps_*``,
+    ``iters_*``) are compared row by row against the baseline (a 2x jump
+    is always a genuine packing bug). Timings are guarded as each
+    section's declared ratio pairs, geomean'd across matched rows,
+    compared against the same ratio in the baseline — machine speed
+    cancels out, so the checked-in baseline stays valid on any box; a 2x
+    relative drift means the engine itself got slower, not the machine.
+    Absolute wall times are never compared across machines. (Real perf
+    gating needs TPU hardware — see ROADMAP.)
 
 Exit status: 0 clean, 1 on any violation (messages on stderr).
 """
@@ -28,33 +30,15 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 
-REQUIRED_SPMV_BATCH_KEYS = (
-    "matrix", "nnz", "group_size", "steps_unbatched", "steps_batched",
-    "padded_elems_unbatched", "padded_elems_batched",
-    "padded_ratio_unbatched", "padded_ratio_batched",
-    "t_unbatched", "t_batched",
+sys.path.insert(
+    0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 )
-# the SpMM section mirrors spmv_batch's schema exactly (same batched-
-# engine claims: step shrink, padded weight stream, kernel-path timing)
-REQUIRED_SPMM_KEYS = REQUIRED_SPMV_BATCH_KEYS
-REQUIRED_SOLVER_KEYS = (
-    "matrix", "solver", "n", "nnz", "iters_to_tol", "iters_ref",
-    "converged", "t_per_iter", "t_ref_per_iter",
-)
-REQUIRED_KEYS_PER_SECTION = {
-    "spmv_batch": REQUIRED_SPMV_BATCH_KEYS,
-    "spmm": REQUIRED_SPMM_KEYS,
-    "solvers": REQUIRED_SOLVER_KEYS,
-}
+from benchmarks.registry import SECTIONS  # noqa: E402
+
 ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_", "iters_")
-# (numerator, denominator): the machine-independent relative timing signals
-TIMING_PAIRS = (
-    ("t_batched", "t_unbatched"),
-    ("t_ref_batched", "t_ref_unbatched"),
-    ("t_per_iter", "t_ref_per_iter"),
-)
 MAX_RATIO = 2.0
 
 
@@ -76,24 +60,50 @@ def load(path: str) -> dict:
     return data
 
 
+def _geomean(xs) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
 def check_schema(data: dict, path: str) -> None:
-    for section, required in REQUIRED_KEYS_PER_SECTION.items():
-        rows = data["sections"].get(section)
+    for name, section in SECTIONS.items():
+        if not section.guarded:
+            continue
+        rows = data["sections"].get(name)
         if rows is None:
             continue
         if not isinstance(rows, list) or not rows:
-            fail(f"{path}: {section} section is empty")
+            fail(f"{path}: {name} section is empty")
         for i, row in enumerate(rows):
-            for key in required:
+            for key in section.required_keys:
                 if key not in row:
-                    fail(f"{path}: {section}[{i}] missing '{key}'")
+                    fail(f"{path}: {name}[{i}] missing '{key}'")
                 val = row[key]
                 if isinstance(val, (int, float)) and not math.isfinite(val):
-                    fail(f"{path}: {section}[{i}]['{key}'] is not finite")
-            if section == "solvers" and row.get("converged") is not True:
-                fail(f"{path}: solvers[{i}] "
-                     f"({row.get('matrix')}/{row.get('solver')}) "
-                     f"did not converge")
+                    fail(f"{path}: {name}[{i}]['{key}'] is not finite")
+            for key in section.require_true:
+                if row.get(key) is not True:
+                    fail(f"{path}: {name}[{i}] "
+                         f"({row.get('matrix')}/{row.get('solver', '-')}) "
+                         f"'{key}' is not True")
+            for key, bound in section.min_values:
+                val = row.get(key)
+                if not isinstance(val, (int, float)) or val < bound:
+                    fail(f"{path}: {name}[{i}]['{key}'] = {val} < "
+                         f"required minimum {bound}")
+        for num, den, bound in section.geomean_max:
+            # clamp: a zero numerator (e.g. an empty planned stream) is a
+            # very-good ratio, not a math domain error
+            ratios = [max(row[num] / row[den], 1e-12) for row in rows
+                      if isinstance(row.get(num), (int, float))
+                      and isinstance(row.get(den), (int, float))
+                      and row[den] > 0]
+            if not ratios:
+                fail(f"{path}: {name} has no rows for "
+                     f"geomean({num}/{den}) bound")
+            geo = _geomean(ratios)
+            if geo > bound:
+                fail(f"{path}: {name} geomean {num}/{den} = {geo:.4f} > "
+                     f"bound {bound} across {len(ratios)} rows")
 
 
 def index_rows(rows) -> dict:
@@ -107,14 +117,16 @@ def index_rows(rows) -> dict:
 
 def check_regressions(new: dict, base: dict) -> list[str]:
     problems = []
-    for section, base_rows in base["sections"].items():
-        new_rows = new["sections"].get(section)
+    for name, base_rows in base["sections"].items():
+        new_rows = new["sections"].get(name)
         if new_rows is None:
             continue  # section not executed this run — nothing to compare
+        timing_pairs = (SECTIONS[name].timing_pairs
+                        if name in SECTIONS else ())
         base_idx = index_rows(base_rows)
         rel_drift: dict[str, list[float]] = {}
-        for name, new_row in index_rows(new_rows).items():
-            base_row = base_idx.get(name)
+        for row_name, new_row in index_rows(new_rows).items():
+            base_row = base_idx.get(row_name)
             if base_row is None:
                 continue
             for key, new_val in new_row.items():
@@ -125,9 +137,9 @@ def check_regressions(new: dict, base: dict) -> list[str]:
                 if key.startswith(ROW_GUARDED_PREFIXES):
                     if new_val > MAX_RATIO * old_val:
                         problems.append(
-                            f"{section}/{name}/{key}: {new_val:.4g} > "
+                            f"{name}/{row_name}/{key}: {new_val:.4g} > "
                             f"{MAX_RATIO}x baseline {old_val:.4g}")
-            for num, den in TIMING_PAIRS:
+            for num, den in timing_pairs:
                 vals = [r.get(k) for r in (new_row, base_row)
                         for k in (num, den)]
                 if not all(isinstance(v, (int, float)) and v > 0
@@ -138,10 +150,10 @@ def check_regressions(new: dict, base: dict) -> list[str]:
                 rel_drift.setdefault(f"{num}/{den}", []).append(
                     new_rel / base_rel)
         for pair, drifts in rel_drift.items():
-            geo = math.exp(sum(math.log(d) for d in drifts) / len(drifts))
+            geo = _geomean(drifts)
             if geo > MAX_RATIO:
                 problems.append(
-                    f"{section}/{pair}: relative timing drifted "
+                    f"{name}/{pair}: relative timing drifted "
                     f"{geo:.2f}x > {MAX_RATIO}x vs baseline across "
                     f"{len(drifts)} rows")
     return problems

@@ -1,0 +1,37 @@
+"""Adaptive autotuning + persistent plan cache for the CB engines.
+
+Converts the repo's hardcoded performance constants (th1/th2 format
+thresholds, the th0 colagg gate, TARGET_STEP_ELEMS / MAX_GROUP_SIZE
+group sizing) into per-matrix decisions: cheap feature extraction
+(``features``), an analytical cost model over the stream builders
+(``cost``), empirical refinement of the top-k candidates (``search``),
+and a schema-versioned content-hash-keyed plan cache (``plan``) so the
+planning cost amortizes across processes. See ``autotune/README.md``.
+"""
+from .cost import (  # noqa: F401
+    CandidateConfig,
+    CostEstimate,
+    DEFAULT_CONFIG,
+    default_candidates,
+    estimate,
+    rank,
+)
+from .features import (  # noqa: F401
+    CANDIDATE_BLOCK_SIZES,
+    BlockProfile,
+    MatrixFeatures,
+    extract_features,
+    features_from_cb,
+)
+from .plan import (  # noqa: F401
+    PLAN_SCHEMA,
+    Plan,
+    PlanCache,
+    matrix_content_hash,
+)
+from .search import (  # noqa: F401
+    DEFAULT_SETTINGS,
+    SearchSettings,
+    plan_search,
+    resolve_mode,
+)

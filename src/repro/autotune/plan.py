@@ -1,0 +1,153 @@
+"""Plan — the autotuner's persistent, schema-versioned decision record.
+
+A ``Plan`` pins every knob the planner decided for one matrix: block
+size, format thresholds (th0/th1/th2), the *resolved* column-aggregation
+bool, and the batched engines' group size — plus the predictions and
+measurements that justified the choice. It is a frozen (hashable)
+dataclass so it can ride ``jax.jit`` static arguments directly
+(``ops.cb_spmv(..., plan=p)``).
+
+Persistence mirrors ``CBMatrix.save``/``load`` (schema string checked on
+load, version ``cb-plan/v1``) but uses JSON — a plan is a dozen scalars,
+and a human should be able to read why the planner chose what it chose.
+
+``PlanCache`` is a directory of such files keyed by the **matrix content
+hash** (sha256 over the canonically-sorted triplets + shape + dtype), so
+planning amortizes across *processes*: a solver restart, a benchmark
+rerun, or a fleet of workers sharing a filesystem all hit the same plan
+without re-searching — the MERBIT regime (PAPERS.md) where per-matrix
+planning cost divides by thousands of reuses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.core.formats import FormatThresholds
+
+PLAN_SCHEMA = "cb-plan/v1"
+
+
+def matrix_content_hash(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    val_dtype=np.float32,
+) -> str:
+    """sha256 of the matrix *content*, independent of triplet order.
+
+    Triplets are canonically (row, col)-sorted before hashing, so the
+    hash of a matrix is stable across whatever order a loader or
+    ``CBMatrix.to_coo`` emitted. Values are hashed in the plan's value
+    dtype — the dtype a plan executes in is part of its identity.
+    """
+    rows = np.ascontiguousarray(rows, np.int64)
+    cols = np.ascontiguousarray(cols, np.int64)
+    vals = np.ascontiguousarray(vals, np.dtype(val_dtype))
+    order = np.lexsort((cols, rows))
+    h = hashlib.sha256()
+    h.update(np.asarray([shape[0], shape[1], len(rows)], np.int64).tobytes())
+    h.update(np.dtype(val_dtype).name.encode())
+    h.update(rows[order].tobytes())
+    h.update(cols[order].tobytes())
+    h.update(vals[order].tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One matrix's tuned CB configuration (see module docstring)."""
+
+    matrix_hash: str
+    shape: tuple[int, int]
+    nnz: int
+    val_dtype: str                  # numpy dtype name
+    block_size: int
+    th0: float
+    th1: int | None                 # None = derive from B (formats.resolve)
+    th2: int | None
+    colagg: bool                    # resolved decision, not the "auto" mode
+    group_size: int
+    mode: str                       # "heuristic" | "timed"
+    predicted_padded_elems: int
+    predicted_steps: int
+    measured_padded_elems: int
+    measured_steps: int
+    t_spmv: float | None = None     # refinement timing (None in heuristic mode)
+
+    @property
+    def thresholds(self) -> FormatThresholds:
+        return FormatThresholds(th0=self.th0, th1=self.th1, th2=self.th2)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        d["schema"] = PLAN_SCHEMA
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Plan":
+        schema = d.get("schema")
+        if schema != PLAN_SCHEMA:
+            raise ValueError(f"plan schema {schema!r} != {PLAN_SCHEMA!r}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["shape"] = tuple(int(v) for v in kw["shape"])
+        return cls(**kw)
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path) -> "Plan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+class PlanCache:
+    """Directory-backed plan store keyed by matrix content hash.
+
+    ``get`` treats an unreadable or schema-mismatched file as a miss
+    (a newer schema simply re-plans rather than erroring a fleet), and
+    counts hits/misses so benchmark sections can report the hit rate.
+    """
+
+    def __init__(self, directory):
+        self.directory = str(directory)
+        os.makedirs(self.directory, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def path_for(self, matrix_hash: str) -> str:
+        return os.path.join(self.directory, f"{matrix_hash}.plan.json")
+
+    def get(self, matrix_hash: str) -> Plan | None:
+        path = self.path_for(matrix_hash)
+        try:
+            plan = Plan.load(path)
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError):
+            self.misses += 1
+            return None
+        if plan.matrix_hash != matrix_hash:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return plan
+
+    def put(self, plan: Plan) -> str:
+        path = self.path_for(plan.matrix_hash)
+        plan.save(path)
+        return path
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

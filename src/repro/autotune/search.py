@@ -1,0 +1,202 @@
+"""Empirical refinement: build (and optionally time) the top-k candidates.
+
+``plan_search`` is the subsystem's front door (``CBMatrix.plan_for``
+delegates here):
+
+  1. hash the matrix; a ``PlanCache`` hit returns the stored plan with
+     zero work (the cross-process amortization path);
+  2. extract features, rank the candidate grid with the analytical cost
+     model (``cost.rank``) — no kernels run;
+  3. **refine**: the top-k candidates plus the default-constants
+     configuration are actually *built* (``CBMatrix.from_coo`` +
+     ``build_super_streams``), giving exact padded-work and step counts
+     instead of estimates. Candidates sharing a structural config
+     (block size / thresholds / colagg) share one CBMatrix build — only
+     the stream packing differs per group size;
+  4. select: in **timed** mode the shortlist is timed through
+     ``ops.cb_spmv`` (``timing.time_min``, interpret-aware — off-TPU the
+     Pallas kernels run interpreted) and the fastest wins. In
+     **heuristic** mode — the default off TPU, where interpret-mode wall
+     time says nothing about hardware — selection minimizes
+     ``padded + STEP_OVERHEAD_ELEMS * steps`` over the *measured*
+     builds, restricted to candidates whose padded work does not exceed
+     the default configuration's (so a tuned plan never regresses the
+     guarded padded-work metric; ``allow_padded_regression=True`` lifts
+     the restriction). Heuristic mode consumes no wall clock anywhere,
+     so the same matrix always yields the same plan bit-for-bit.
+
+The returned ``Plan`` records the winning configuration with its
+*resolved* colagg decision plus the model's prediction and the measured
+values, and is stored in the cache when one was given.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cb_matrix import CBMatrix
+from repro.core.streams import build_super_streams
+
+from . import timing
+from .cost import (
+    DEFAULT_CONFIG, STEP_OVERHEAD_ELEMS, CandidateConfig, default_candidates,
+    estimate, rank,
+)
+from .features import extract_features
+from .plan import Plan, PlanCache, matrix_content_hash
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSettings:
+    """Knobs of the refinement pass (not of the candidate space)."""
+
+    top_k: int = 3
+    mode: str = "auto"              # "heuristic" | "timed" | "auto"
+    timing_reps: int = 5
+    allow_padded_regression: bool = False
+    candidates: tuple[CandidateConfig, ...] | None = None
+
+
+DEFAULT_SETTINGS = SearchSettings()
+
+
+def resolve_mode(mode: str) -> str:
+    """'auto' -> timed on real TPU hardware, heuristic elsewhere.
+
+    Off TPU the Pallas kernels run in interpret mode, whose wall time
+    reflects the interpreter, not the machine the plan will serve —
+    timing there would tune for the wrong target (and break the
+    determinism contract for no gain).
+    """
+    if mode in ("heuristic", "timed"):
+        return mode
+    if mode != "auto":
+        raise ValueError(f"unknown search mode {mode!r}")
+    import jax
+
+    return "timed" if jax.default_backend() == "tpu" else "heuristic"
+
+
+@dataclasses.dataclass
+class _Refined:
+    """One shortlisted candidate after the build-and-measure pass."""
+
+    config: CandidateConfig
+    cb: CBMatrix
+    streams: object
+    padded_elems: int
+    steps: int
+    t_spmv: float | None = None
+
+    @property
+    def heuristic_score(self) -> float:
+        return self.padded_elems + STEP_OVERHEAD_ELEMS * self.steps
+
+
+def _build_candidate(rows, cols, vals, shape, val_dtype, config,
+                     cb_by_structure: dict) -> _Refined:
+    skey = (config.block_size, config.thresholds, config.colagg)
+    cb = cb_by_structure.get(skey)
+    if cb is None:
+        cb = cb_by_structure[skey] = CBMatrix.from_coo(
+            rows, cols, vals, shape,
+            block_size=config.block_size,
+            val_dtype=val_dtype,
+            thresholds=config.thresholds,
+            use_column_aggregation=config.colagg,
+        )
+    streams = build_super_streams(cb, group_size=config.resolved_group_size())
+    return _Refined(
+        config=config, cb=cb, streams=streams,
+        padded_elems=int(sum(streams.padded_work().values())),
+        steps=int(streams.num_dense_groups + streams.num_panel_groups
+                  + streams.num_coo_groups),
+    )
+
+
+def _time_candidate(refined: _Refined, shape, reps: int) -> float:
+    from repro.kernels import ops
+
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal(shape[1]), jnp.float32
+    )
+    return timing.time_min(
+        lambda s, xx: ops.cb_spmv(s, xx, impl="pallas"),
+        refined.streams.device_put(), x, reps=reps,
+    )
+
+
+def plan_search(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    *,
+    val_dtype=np.float32,
+    cache: PlanCache | None = None,
+    settings: SearchSettings | None = None,
+) -> Plan:
+    """Pick a per-matrix CB configuration (see module docstring)."""
+    settings = DEFAULT_SETTINGS if settings is None else settings
+    val_dtype = np.dtype(val_dtype)
+    mhash = matrix_content_hash(rows, cols, vals, shape, val_dtype)
+    if cache is not None:
+        hit = cache.get(mhash)
+        if hit is not None:
+            return hit
+
+    mode = resolve_mode(settings.mode)
+    features = extract_features(rows, cols, vals, shape)
+    candidates = (default_candidates() if settings.candidates is None
+                  else settings.candidates)
+    ranked = rank(features, candidates)
+
+    # shortlist: top-k by model score, default config always present
+    shortlist = [c for c, _ in ranked[: max(1, settings.top_k)]]
+    if DEFAULT_CONFIG not in shortlist:
+        shortlist.append(DEFAULT_CONFIG)
+
+    cb_by_structure: dict = {}
+    refined = [
+        _build_candidate(rows, cols, vals, shape, val_dtype, c,
+                         cb_by_structure)
+        for c in shortlist
+    ]
+    default_refined = next(r for r in refined if r.config == DEFAULT_CONFIG)
+
+    if mode == "timed":
+        for r in refined:
+            r.t_spmv = _time_candidate(r, shape, settings.timing_reps)
+        best = min(refined, key=lambda r: (r.t_spmv, r.padded_elems))
+    else:
+        pool = refined
+        if not settings.allow_padded_regression:
+            pool = [r for r in refined
+                    if r.padded_elems <= default_refined.padded_elems]
+        # min() is stable: ties keep shortlist (= model-rank) order
+        best = min(pool, key=lambda r: r.heuristic_score)
+
+    predicted = estimate(features, best.config)
+    plan = Plan(
+        matrix_hash=mhash,
+        shape=tuple(int(v) for v in shape),
+        nnz=features.nnz,
+        val_dtype=val_dtype.name,
+        block_size=best.config.block_size,
+        th0=best.config.thresholds.th0,
+        th1=best.config.thresholds.th1,
+        th2=best.config.thresholds.th2,
+        colagg=bool(best.cb.colagg.applied),
+        group_size=best.config.resolved_group_size(),
+        mode=mode,
+        predicted_padded_elems=predicted.padded_elems,
+        predicted_steps=predicted.steps,
+        measured_padded_elems=best.padded_elems,
+        measured_steps=best.steps,
+        t_spmv=best.t_spmv,
+    )
+    if cache is not None:
+        cache.put(plan)
+    return plan

@@ -1,0 +1,30 @@
+"""Measurement helpers shared by the autotuner and the benchmark sections.
+
+Lives in-package so ``search.py``'s empirical refinement can time
+candidates without reaching outside ``src/``; ``benchmarks/_timing.py``
+re-exports these same helpers so every benchmark section keeps one
+timing discipline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def time_min(fn, *args, reps=15):
+    """Min of individually-timed calls (two warmups first): robust to
+    scheduler noise at the microsecond scales the small matrices produce
+    on a shared box."""
+    fn(*args).block_until_ready()
+    fn(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

@@ -57,6 +57,7 @@ class CBMatrix:
         warps_per_tb: int = 8,
     ) -> "CBMatrix":
         val_dtype = np.dtype(val_dtype)
+        thresholds = formats.coerce_thresholds(thresholds)
         rows = np.asarray(rows)
         cols = np.asarray(cols)
         vals = np.asarray(vals, dtype=val_dtype)
@@ -111,6 +112,65 @@ class CBMatrix:
             colagg=agg,
             balance_result=bal,
             nnz=part.nnz,
+        )
+
+    # ------------------------------------------------------------------
+    # Planning — the autotune subsystem's entry points, surfaced here so
+    # ``from_coo``'s callers find them next to the constructor they tune.
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def plan_for(
+        cls,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: tuple[int, int],
+        *,
+        val_dtype=np.float32,
+        cache=None,
+        settings=None,
+    ):
+        """``from_coo``'s companion: pick a per-matrix configuration.
+
+        Runs the autotune search (features -> cost model -> empirical
+        refinement; see ``src/repro/autotune/``) and returns a ``Plan``
+        whose (block size, thresholds, colagg, group size) can be applied
+        via :meth:`from_plan`. ``cache`` is an optional
+        ``autotune.PlanCache`` — a content-hash hit skips the search
+        entirely, the MERBIT cross-process amortization regime.
+        """
+        from repro.autotune.search import plan_search
+
+        return plan_search(rows, cols, vals, shape, val_dtype=val_dtype,
+                           cache=cache, settings=settings)
+
+    @classmethod
+    def from_plan(
+        cls,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+        shape: tuple[int, int],
+        plan,
+    ) -> "CBMatrix":
+        """Build the CB structure with a ``Plan``'s chosen configuration.
+
+        The plan's colagg decision was *resolved* at planning time, so it
+        is passed as an explicit bool — rebuilding from a cached plan is
+        bit-identical to the freshly-planned build even if the th0 gate
+        would flip on a re-probe.
+        """
+        if tuple(shape) != tuple(plan.shape):
+            raise ValueError(
+                f"plan was made for shape {plan.shape}, got {tuple(shape)}"
+            )
+        return cls.from_coo(
+            rows, cols, vals, shape,
+            block_size=plan.block_size,
+            val_dtype=np.dtype(plan.val_dtype),
+            thresholds=plan.thresholds,
+            use_column_aggregation=plan.colagg,
         )
 
     # ------------------------------------------------------------------
@@ -218,6 +278,39 @@ class CBMatrix:
                 self.block_size, self.val_dtype,
             )
             yield int(self.blk_row_idx[i]), int(self.blk_col_idx[i]), fmt, r, c, v
+
+    def to_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Recover the original-coordinate triplets, row-major sorted.
+
+        Column aggregation is folded back through ``global_x_index``, so
+        the triplets are position-faithful to the input of ``from_coo``.
+        The canonical (row, col) sort makes the output independent of the
+        balanced slot order — two CBMatrix builds of the same matrix
+        yield bit-identical triplets (the determinism the autotuner's
+        content hash relies on).
+
+        Caveat: *explicitly stored zeros* do not survive. A 0.0 value
+        inside a dense-format block is indistinguishable from structural
+        padding in the packed tile (inherent to the CB byte format, same
+        as ``to_dense``), so such entries are dropped — meaning the
+        autotuner's content hash of ``to_coo`` output can differ from a
+        hash of original triplets that carried explicit zeros (a cache
+        miss, never a wrong plan).
+        """
+        rs, cs, vs = [], [], []
+        B = self.block_size
+        for brow, bcol, _fmt, r, c, v in self.iter_blocks():
+            rs.append(brow * B + r.astype(np.int64))
+            cs.append(self.global_x_index(brow, bcol, c))
+            vs.append(v)
+        if not rs:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    np.zeros(0, self.val_dtype))
+        r_all = np.concatenate(rs)
+        c_all = np.concatenate(cs)
+        v_all = np.concatenate(vs)
+        order = np.lexsort((c_all, r_all))
+        return r_all[order], c_all[order], v_all[order]
 
     def global_x_index(self, brow: int, bcol: int, local_c: np.ndarray) -> np.ndarray:
         """Map (block, local col) -> original global column of x."""

@@ -38,8 +38,21 @@ class FormatThresholds:
         area = block_size * block_size
         th1 = self.th1 if self.th1 is not None else max(1, area // 8)
         th2 = self.th2 if self.th2 is not None else max(th1, area // 2)
-        if not (0 < th1 <= th2 <= area):
-            raise ValueError(f"invalid thresholds th1={th1} th2={th2} for B={block_size}")
+        if th1 < 1:
+            raise ValueError(
+                f"th1 must be >= 1 (a block always holds at least one "
+                f"element), got th1={th1} for B={block_size}"
+            )
+        if th2 < th1:
+            raise ValueError(
+                f"th2 must be >= th1 (the CSR band cannot be negative), "
+                f"got th1={th1} > th2={th2} for B={block_size}"
+            )
+        if th2 > area:
+            raise ValueError(
+                f"th2 must be <= B*B={area} (no block holds more than its "
+                f"area), got th2={th2} for B={block_size}"
+            )
         return th1, th2
 
 
@@ -65,13 +78,35 @@ def should_column_aggregate(
     return super_sparse_fraction(nnz_per_blk, block_size) >= thresholds.th0
 
 
+def coerce_thresholds(thresholds) -> FormatThresholds:
+    """Accept a ``FormatThresholds`` or anything carrying one (a ``Plan``).
+
+    The autotune subsystem's ``Plan`` exposes its chosen thresholds as a
+    ``.thresholds`` property; selectors take either the bare record or the
+    plan so callers never unwrap by hand.
+    """
+    if isinstance(thresholds, FormatThresholds):
+        return thresholds
+    inner = getattr(thresholds, "thresholds", None)
+    if isinstance(inner, FormatThresholds):
+        return inner
+    raise TypeError(
+        f"expected FormatThresholds or a Plan carrying one, "
+        f"got {type(thresholds).__name__}"
+    )
+
+
 def select_formats(
     nnz_per_blk: np.ndarray,
     block_size: int,
     thresholds: FormatThresholds = DEFAULT_THRESHOLDS,
 ) -> np.ndarray:
-    """Vectorized per-block format selection. Returns uint8 codes."""
-    th1, th2 = thresholds.resolve(block_size)
+    """Vectorized per-block format selection. Returns uint8 codes.
+
+    ``thresholds`` may be a ``FormatThresholds`` or an autotune ``Plan``
+    (anything with a ``.thresholds`` property) — see ``coerce_thresholds``.
+    """
+    th1, th2 = coerce_thresholds(thresholds).resolve(block_size)
     nnz = np.asarray(nnz_per_blk)
     fmt = np.full(nnz.shape, FMT_CSR, dtype=np.uint8)
     fmt[nnz < th1] = FMT_COO

@@ -97,7 +97,9 @@ def spmm_block_n(n_cols: int, block_n: int = LANE) -> int:
 # Aim each grid step's payload at about this many elements: big enough to
 # amortize per-step DMA/launch overhead, small enough that many steps
 # remain for the megacore "parallel" partitioning and the per-step one-hot
-# scratch stays comfortably inside VMEM.
+# scratch stays comfortably inside VMEM. These are the *default* knob
+# values; the autotune subsystem (src/repro/autotune/) overrides them per
+# matrix through ``group_size_for``.
 TARGET_STEP_ELEMS = 4096
 
 # Upper bound on blocks per grid step: caps the unrolled dense loop and
@@ -105,10 +107,26 @@ TARGET_STEP_ELEMS = 4096
 MAX_GROUP_SIZE = 16
 
 
+def group_size_for(
+    block_size: int,
+    target_step_elems: int = TARGET_STEP_ELEMS,
+    max_group: int = MAX_GROUP_SIZE,
+) -> int:
+    """THE single home of the blocks-per-grid-step occupancy rule.
+
+    ``target_step_elems // B^2`` blocks per step, clamped to
+    ``[1, max_group]``. Every stream builder (``build_super_streams``,
+    ``build_super_tile_stream``) routes its ``group_size=None`` default
+    through here, and the autotuner's cost model sweeps the two knobs as
+    per-matrix decisions instead of module constants.
+    """
+    g = int(target_step_elems) // (int(block_size) * int(block_size))
+    return int(min(max(g, 1), int(max_group)))
+
+
 def auto_group_size(block_size: int) -> int:
-    """Occupancy heuristic: blocks per grid step for a given block size."""
-    g = TARGET_STEP_ELEMS // (block_size * block_size)
-    return int(min(max(g, 1), MAX_GROUP_SIZE))
+    """Occupancy heuristic at the default knobs (see ``group_size_for``)."""
+    return group_size_for(block_size)
 
 
 def even_group(count: int, group_size: int) -> tuple[int, int]:
@@ -379,7 +397,7 @@ def build_super_streams(
 ) -> SuperBlockStreams:
     """Pack CB blocks into balanced super-block groups (host-side).
 
-    ``group_size=None`` picks ``auto_group_size(B)`` — the occupancy
+    ``group_size=None`` picks ``group_size_for(B)`` — the occupancy
     heuristic targeting ~``TARGET_STEP_ELEMS`` payload elements per grid
     step. Group assignment reuses the paper's Alg. 2 heap balancer
     (``balance.grid_group_balance``): dense groups balance nnz across
@@ -392,7 +410,7 @@ def build_super_streams(
     m, n = cb.shape
     mb = -(-m // B)
     vdt = cb.val_dtype
-    G = auto_group_size(B) if group_size is None else int(group_size)
+    G = group_size_for(B) if group_size is None else int(group_size)
     if G < 1:
         raise ValueError(f"group_size must be >= 1, got {G}")
 
@@ -757,7 +775,7 @@ def build_super_tile_stream(
     """Pack SpMM tiles into nnz-balanced super-tile groups (host-side).
 
     Mirrors ``build_super_streams`` for the tile stream: ``group_size=
-    None`` picks ``auto_group_size(B)``; tiles are assigned to groups by
+    None`` picks ``group_size_for(B)``; tiles are assigned to groups by
     the Alg. 2 heap balancer (``balance.grid_group_balance``) on per-tile
     nnz, with slots evened via ``even_group`` so the tail group is never
     mostly padding. Group order inside the balancer result is preserved
@@ -765,7 +783,7 @@ def build_super_tile_stream(
     slot order, so the balanced schedule rides through unchanged.
     """
     B = ts.block_size
-    G = auto_group_size(B) if group_size is None else int(group_size)
+    G = group_size_for(B) if group_size is None else int(group_size)
     if G < 1:
         raise ValueError(f"group_size must be >= 1, got {G}")
 

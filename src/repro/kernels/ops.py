@@ -137,7 +137,32 @@ def _super_partials_pallas(s: SuperBlockStreams, x: jax.Array, interp: bool):
     return parts
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret", "group_size"))
+def _resolve_plan(streams, plan, group_size):
+    """Fold an autotune ``Plan`` into the effective ``group_size``.
+
+    Duck-typed (any object with ``block_size``/``group_size``) so this
+    module never imports the autotune package. The plan's block size
+    must match the streams it is applied to; an explicit conflicting
+    ``group_size`` is an error, matching the SuperBlockStreams contract.
+    """
+    if plan is None:
+        return group_size
+    if plan.block_size != streams.block_size:
+        raise ValueError(
+            f"plan was made for block_size={plan.block_size}; "
+            f"streams carry block_size={streams.block_size}"
+        )
+    if group_size is not None and group_size != plan.group_size:
+        raise ValueError(
+            f"plan chose group_size={plan.group_size}; conflicting "
+            f"explicit group_size={group_size}"
+        )
+    return plan.group_size
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "interpret", "group_size", "plan")
+)
 def cb_spmv(
     streams: SpMVStreams | SuperBlockStreams,
     x: jax.Array,
@@ -145,18 +170,22 @@ def cb_spmv(
     impl: str = "pallas",
     interpret: bool | None = None,
     group_size: int | None = None,
+    plan=None,
 ) -> jax.Array:
     """y = A @ x over the CB streams. x: (n,) -> y: (m,) float32.
 
     ``group_size`` (static) only applies to ``SpMVStreams`` input: blocks
     are fused G per grid step via ``_regroup``. ``SuperBlockStreams``
     carry their group size from the host-side packer; passing a
-    conflicting value is an error.
+    conflicting value is an error. ``plan`` (static, an autotune
+    ``Plan``) supplies the group size the planner chose — it must agree
+    with both an explicit ``group_size`` and a packed stream's.
 
     ``impl="reference"`` stays an *independent* oracle: it consumes the
     stream layout as given (no regrouping), so batched Pallas results are
     always checked against math that never touched the batching code.
     """
+    group_size = _resolve_plan(streams, plan, group_size)
     _check_group_size(streams, group_size)
 
     if impl == "reference":
@@ -199,7 +228,7 @@ def _combine_into(y2d, sup: SuperBlockStreams, x: jax.Array, interp: bool):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("impl", "interpret", "group_size"),
+    static_argnames=("impl", "interpret", "group_size", "plan"),
     donate_argnums=(0,),
 )
 def cb_spmv_into(
@@ -210,6 +239,7 @@ def cb_spmv_into(
     impl: str = "pallas",
     interpret: bool | None = None,
     group_size: int | None = None,
+    plan=None,
 ) -> jax.Array:
     """``y_acc + A @ x`` with the ``(m,)`` accumulator **donated**.
 
@@ -220,6 +250,7 @@ def cb_spmv_into(
     donation, e.g. CPU — then this is just fused accumulate-SpMV). The
     caller must not reuse ``y_acc`` after the call, per donation rules.
     """
+    group_size = _resolve_plan(streams, plan, group_size)
     _check_group_size(streams, group_size)
     if impl == "reference":
         return y_acc + cb_spmv(streams, x, impl="reference")
@@ -268,7 +299,8 @@ def _regroup_tiles(ts: TileStream, G: int) -> SuperTileStream:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("impl", "interpret", "block_n", "group_size")
+    jax.jit,
+    static_argnames=("impl", "interpret", "block_n", "group_size", "plan"),
 )
 def cb_spmm(
     stream: TileStream | SuperTileStream,
@@ -278,6 +310,7 @@ def cb_spmm(
     interpret: bool | None = None,
     block_n: int = 128,
     group_size: int | None = None,
+    plan=None,
 ) -> jax.Array:
     """Y = A @ X over the block-dense tile stream. X: (n, N) -> Y: (m, N).
 
@@ -293,8 +326,11 @@ def cb_spmm(
     LANE multiple, with X zero-padded to match (the old
     ``min(block_n, max(8, N))`` policy emitted lane-misaligned widths
     that only interpret mode accepted). ``impl="reference"`` stays an
-    independent oracle on the layout as given (no regrouping).
+    independent oracle on the layout as given (no regrouping). ``plan``
+    (static, an autotune ``Plan``) supplies the planner's group size,
+    with the same conflict rules as ``cb_spmv``.
     """
+    group_size = _resolve_plan(stream, plan, group_size)
     _check_tile_group_size(stream, group_size)
     if impl == "reference":
         if isinstance(stream, SuperTileStream):

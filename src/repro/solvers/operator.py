@@ -59,6 +59,8 @@ class CBLinearOperator:
     streams: SuperBlockStreams
     streams_T: SuperBlockStreams | None = None
     tiles: SuperTileStream | None = None
+    # -- static (autotune) -----------------------------------------------
+    plan: object | None = None       # the Plan that shaped the streams
 
     # ------------------------------------------------------------------
     @classmethod
@@ -69,6 +71,9 @@ class CBLinearOperator:
         group_size: int | None = None,
         with_rmatvec: bool = False,
         with_matmat: bool = False,
+        plan: object | None = None,
+        plan_cache=None,
+        plan_settings=None,
     ) -> "CBLinearOperator":
         """Build every requested stream once (host-side, plan time).
 
@@ -79,7 +84,39 @@ class CBLinearOperator:
         triple its plan time (and skew the amortization story) for paths
         it never runs. ``group_size`` is shared by every stream built
         here, so matvec and matmat amortize per-step overhead alike.
+
+        ``plan`` hooks in the autotune subsystem, and since the operator
+        IS the amortization regime (thousands of applications of one
+        matrix), construction is where planning pays for itself:
+
+          * ``None`` — keep ``cb``'s configuration as built (default);
+          * ``"auto"`` — run ``CBMatrix.plan_for`` on ``cb``'s triplets
+            (consulting ``plan_cache`` when given, searching with
+            ``plan_settings`` — e.g. ``SearchSettings(mode="heuristic")``
+            to force determinism on TPU) and rebuild the CB structure
+            with the winning configuration;
+          * a ``Plan`` — apply that plan's configuration directly.
+
+        A tuned plan owns the group-size decision, so combining ``plan``
+        with an explicit ``group_size`` is an error.
         """
+        if plan is not None:
+            if group_size is not None:
+                raise ValueError(
+                    "pass either plan= or group_size=, not both — a plan "
+                    "carries its own group size"
+                )
+            rows, cols, vals = cb.to_coo()
+            if isinstance(plan, str):
+                if plan != "auto":
+                    raise ValueError(f"unknown plan mode {plan!r}")
+                plan = CBMatrix.plan_for(
+                    rows, cols, vals, cb.shape,
+                    val_dtype=cb.val_dtype, cache=plan_cache,
+                    settings=plan_settings,
+                )
+            cb = CBMatrix.from_plan(rows, cols, vals, cb.shape, plan)
+            group_size = plan.group_size
         return cls(
             shape=tuple(cb.shape),
             block_size=cb.block_size,
@@ -89,6 +126,7 @@ class CBLinearOperator:
                        if with_rmatvec else None),
             tiles=(super_tile_stream_from_cb(cb, group_size=group_size)
                    if with_matmat else None),
+            plan=plan,
         )
 
     # ------------------------------------------------------------------
@@ -144,5 +182,5 @@ class CBLinearOperator:
 jax.tree_util.register_dataclass(
     CBLinearOperator,
     data_fields=["streams", "streams_T", "tiles"],
-    meta_fields=["shape", "block_size", "nnz"],
+    meta_fields=["shape", "block_size", "nnz", "plan"],
 )

@@ -282,8 +282,24 @@ def cb_linear_apply(
     impl: str = "reference",
     interpret: bool | None = None,
     group_size: int | None = None,
+    plan=None,
 ) -> jax.Array:
-    """y = x @ W for x of shape (..., in_features)."""
+    """y = x @ W for x of shape (..., in_features).
+
+    ``plan`` (an autotune ``Plan``) supplies the SpMM group size the
+    planner chose — the one plan knob that applies to the layer's
+    block-dense tile stream (the structural knobs are fixed by the
+    spec). Conflicting explicit ``group_size`` is an error; the resolved
+    value feeds the same matmul cache, so plan-carrying calls and
+    explicit-group calls share closures.
+    """
+    if plan is not None:
+        if group_size is not None and group_size != plan.group_size:
+            raise ValueError(
+                f"plan chose group_size={plan.group_size}; conflicting "
+                f"explicit group_size={group_size}"
+            )
+        group_size = plan.group_size
     matmul = _cached_matmul(spec, impl, interpret, group_size)
     lead = x.shape[:-1]
     X = x.reshape(-1, spec.in_features).T  # (in, N)

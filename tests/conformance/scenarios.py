@@ -252,5 +252,15 @@ def batched_ids(grid: list[tuple[Scenario, int]]) -> list[str]:
     return [f"{s.name}-G{g}" for s, g in grid]
 
 
+def planned_scenarios() -> list[Scenario]:
+    """The autotune axis: one scenario per structure, planner decides.
+
+    Block size / thresholds / colagg / group size in the scenario are
+    ignored by the planned tests — the autotuner chooses them from the
+    raw COO triplets; the scenario only contributes the structure.
+    """
+    return [Scenario(structure, 16, "auto") for structure in STRUCTURES]
+
+
 def scenario_ids(scenarios: list[Scenario]) -> list[str]:
     return [s.name for s in scenarios]

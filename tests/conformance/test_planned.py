@@ -1,0 +1,96 @@
+"""Conformance for the autotune axis: planned execution must stay exact.
+
+For every structure in the grid the autotuner picks a full configuration
+(block size, thresholds, colagg, group size) from the raw triplets; the
+planned pipeline must then:
+
+  * agree with the flat (unbatched) reference lowering of the SAME
+    planned CB structure to <= 1e-5 — the cross-implementation contract
+    every perf feature is held to;
+  * agree with the CB-independent dense oracle on the ORIGINAL triplets
+    — tuning must not change the math;
+  * execute **bit-identically** after a plan-cache round trip: plan ->
+    save -> load -> rebuild -> run equals the freshly-planned run
+    exactly (the cross-process amortization story is only safe if a
+    cached plan reproduces the run, not just approximates it);
+  * be deterministic: planning the same matrix twice (heuristic mode —
+    no wall-clock inputs) yields the same ``Plan``, field for field.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import Plan, PlanCache, SearchSettings, plan_search
+from repro.core import CBMatrix
+from repro.core.spmv_ref import dense_oracle
+from repro.core.streams import build_streams, build_super_streams
+from repro.kernels import ops
+
+from .scenarios import planned_scenarios, scenario_ids
+
+pytestmark = pytest.mark.conformance
+
+SCENARIOS = planned_scenarios()
+
+# Pin heuristic mode so bit-equality and determinism hold on EVERY
+# backend — mode="auto" would switch to wall-clock-driven timed search
+# on a TPU host and break both.
+DETERMINISTIC = SearchSettings(mode="heuristic")
+
+
+def _planned_spmv(plan, rows, cols, vals, shape, x) -> np.ndarray:
+    """The full planned pipeline: rebuild + pack + batched Pallas run."""
+    cb = CBMatrix.from_plan(rows, cols, vals, shape, plan)
+    streams = build_super_streams(cb, group_size=plan.group_size)
+    return np.asarray(
+        ops.cb_spmv(streams.device_put(), x, impl="pallas", interpret=True)
+    )
+
+
+@pytest.mark.parametrize("scn", SCENARIOS, ids=scenario_ids(SCENARIOS))
+def test_planned_agreement_and_cache_bit_equality(scn, tmp_path):
+    rows, cols, vals, shape = scn.build_coo()
+    vals = vals.astype(np.float32)
+    x = jnp.asarray(
+        np.random.default_rng(7).standard_normal(shape[1]), jnp.float32
+    )
+
+    cache = PlanCache(tmp_path / "plans")
+    plan = plan_search(rows, cols, vals, shape, cache=cache,
+                       settings=DETERMINISTIC)
+    y_planned = _planned_spmv(plan, rows, cols, vals, shape, x)
+
+    # --- planned Pallas vs flat reference of the planned structure -------
+    cb = CBMatrix.from_plan(rows, cols, vals, shape, plan)
+    y_ref = np.asarray(
+        ops.cb_spmv(build_streams(cb).device_put(), x, impl="reference")
+    )
+    np.testing.assert_allclose(y_planned, y_ref, rtol=1e-5, atol=1e-5)
+
+    # --- tuning must not change the math ---------------------------------
+    expected = dense_oracle(rows, cols, vals, shape, np.asarray(x))
+    np.testing.assert_allclose(y_ref, expected, rtol=3e-4, atol=3e-4)
+
+    # --- cache round trip executes bit-identically -----------------------
+    loaded = Plan.load(cache.path_for(plan.matrix_hash))
+    assert loaded == plan
+    y_loaded = _planned_spmv(loaded, rows, cols, vals, shape, x)
+    np.testing.assert_array_equal(y_loaded, y_planned)
+
+    # --- and a cache *hit* returns that exact plan -----------------------
+    hit = plan_search(rows, cols, vals, shape, cache=cache,
+                      settings=DETERMINISTIC)
+    assert hit == plan
+    assert cache.hits >= 1
+
+
+@pytest.mark.parametrize("scn", SCENARIOS[:3], ids=scenario_ids(SCENARIOS[:3]))
+def test_plan_determinism(scn):
+    """Same matrix -> same plan: heuristic mode has no wall-clock inputs."""
+    rows, cols, vals, shape = scn.build_coo()
+    vals = vals.astype(np.float32)
+    p1 = plan_search(rows, cols, vals, shape, settings=DETERMINISTIC)
+    p2 = plan_search(rows, cols, vals, shape, settings=DETERMINISTIC)
+    assert p1 == p2
+    assert p1.mode == "heuristic"
+    assert p1.t_spmv is None  # no timing ran

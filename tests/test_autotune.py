@@ -1,0 +1,421 @@
+"""Unit tests for the autotune subsystem + its threading through the stack."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    CANDIDATE_BLOCK_SIZES,
+    CandidateConfig,
+    DEFAULT_CONFIG,
+    Plan,
+    PlanCache,
+    SearchSettings,
+    default_candidates,
+    estimate,
+    extract_features,
+    features_from_cb,
+    matrix_content_hash,
+    plan_search,
+    rank,
+)
+from repro.core import CBMatrix
+from repro.core.formats import (
+    DEFAULT_THRESHOLDS, FormatThresholds, coerce_thresholds, select_formats,
+)
+from repro.core.streams import (
+    MAX_GROUP_SIZE,
+    TARGET_STEP_ELEMS,
+    build_super_streams,
+    build_super_tile_stream,
+    group_size_for,
+    tile_stream_from_cb,
+)
+from repro.data import matrices
+from repro.kernels import ops
+from repro.solvers import CBLinearOperator
+
+
+def _coo(seed=0, m=160, n=144):
+    r, c, v = matrices.power_law(m, n, seed=seed)
+    return r, c, v.astype(np.float32), (m, n)
+
+
+def _tree_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------------------
+# group_size_for — the deduplicated occupancy rule (satellite)
+# ---------------------------------------------------------------------------
+
+def test_group_size_for_matches_legacy_rule():
+    for B in (8, 16, 24, 32, 64):
+        legacy = int(min(max(TARGET_STEP_ELEMS // (B * B), 1), MAX_GROUP_SIZE))
+        assert group_size_for(B) == legacy
+
+
+def test_group_size_for_overridable_knobs():
+    assert group_size_for(16, target_step_elems=256) == 1
+    assert group_size_for(8, max_group=4) == 4
+    assert group_size_for(128) == 1  # clamps up to 1
+
+
+@pytest.mark.parametrize("B", [8, 16, 24])
+def test_builders_route_through_group_size_for(B):
+    """group_size=None and group_size=group_size_for(B) are bit-identical."""
+    r, c, v, shape = _coo(seed=3)
+    cb = CBMatrix.from_coo(r, c, v, shape, block_size=B,
+                           val_dtype=np.float32)
+    auto_s = build_super_streams(cb)
+    expl_s = build_super_streams(cb, group_size=group_size_for(B))
+    assert auto_s.group_size == group_size_for(B)
+    assert _tree_equal(auto_s, expl_s)
+
+    ts = tile_stream_from_cb(cb)
+    auto_t = build_super_tile_stream(ts)
+    expl_t = build_super_tile_stream(ts, group_size=group_size_for(B))
+    assert auto_t.group_size == group_size_for(B)
+    assert _tree_equal(auto_t, expl_t)
+
+
+# ---------------------------------------------------------------------------
+# formats: named constraint errors + Plan acceptance (satellite)
+# ---------------------------------------------------------------------------
+
+def test_resolve_errors_name_the_offending_constraint():
+    with pytest.raises(ValueError, match="th1 must be >= 1"):
+        FormatThresholds(th1=0).resolve(16)
+    with pytest.raises(ValueError, match="th2 must be >= th1"):
+        FormatThresholds(th1=100, th2=50).resolve(16)
+    with pytest.raises(ValueError, match="th2 must be <= B\\*B"):
+        FormatThresholds(th2=257).resolve(16)
+
+
+def _mini_plan(**overrides):
+    kw = dict(
+        matrix_hash="0" * 64, shape=(16, 16), nnz=4, val_dtype="float32",
+        block_size=16, th0=0.15, th1=4, th2=32, colagg=False, group_size=4,
+        mode="heuristic", predicted_padded_elems=100, predicted_steps=2,
+        measured_padded_elems=90, measured_steps=2,
+    )
+    kw.update(overrides)
+    return Plan(**kw)
+
+
+def test_select_formats_accepts_plan():
+    plan = _mini_plan()
+    nnz = np.array([1, 10, 200])
+    np.testing.assert_array_equal(
+        select_formats(nnz, 16, plan),
+        select_formats(nnz, 16, FormatThresholds(th1=4, th2=32)),
+    )
+    with pytest.raises(TypeError, match="FormatThresholds"):
+        coerce_thresholds(42)
+
+
+def test_from_coo_accepts_plan_as_thresholds():
+    r, c, v, shape = _coo(seed=5)
+    plan = _mini_plan(shape=shape)
+    cb = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                           val_dtype=np.float32, thresholds=plan)
+    assert cb.thresholds == FormatThresholds(th0=0.15, th1=4, th2=32)
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+def test_features_exact_on_handmade_matrix():
+    # two blocks at B=8 in a 16x16 matrix: block (0,0) holds 3 elements in
+    # 2 distinct columns; block (1,1) holds 1 element.
+    rows = np.array([0, 1, 2, 9])
+    cols = np.array([0, 0, 3, 10])
+    vals = np.ones(4, np.float32)
+    f = extract_features(rows, cols, vals, (16, 16), block_sizes=(8,))
+    p = f.profile(8)
+    assert p.num_blocks == 2
+    np.testing.assert_array_equal(np.sort(p.nnz_per_block), [1, 3])
+    np.testing.assert_array_equal(np.sort(p.cols_per_block), [1, 2])
+    np.testing.assert_array_equal(np.sort(p.panel_nnz), [1, 3])
+    np.testing.assert_array_equal(np.sort(p.panel_cols), [1, 2])
+    assert f.nnz == 4
+    assert f.row_nnz_max == 1
+    assert p.super_sparse_fraction == 1.0  # all blocks < 16 nnz
+    with pytest.raises(KeyError, match="no block profile"):
+        f.profile(16)
+
+
+def test_features_from_cb_match_raw_triplets():
+    r, c, v, shape = _coo(seed=8)
+    cb = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                           val_dtype=np.float32)
+    f_raw = extract_features(r, c, v, shape)
+    f_cb = features_from_cb(cb)
+    assert f_cb.nnz == f_raw.nnz
+    for B in CANDIDATE_BLOCK_SIZES:
+        np.testing.assert_array_equal(
+            np.sort(f_cb.profile(B).nnz_per_block),
+            np.sort(f_raw.profile(B).nnz_per_block),
+        )
+
+
+def test_to_coo_roundtrip():
+    r, c, v, shape = _coo(seed=9)
+    for colagg in (True, False):
+        cb = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                               val_dtype=np.float32,
+                               use_column_aggregation=colagg)
+        r2, c2, v2 = cb.to_coo()
+        dense = np.zeros(shape, np.float32)
+        dense[r2, c2] = v2
+        np.testing.assert_array_equal(dense, cb.to_dense())
+        # canonical order: strictly increasing (row, col) keys
+        key = r2 * shape[1] + c2
+        assert np.all(np.diff(key) > 0)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_estimate_exact_without_colagg():
+    """For colagg=False the model's padded work is exact stream arithmetic
+    whenever the balancer hits its target width (single-group case)."""
+    r, c, v, shape = _coo(seed=4)
+    cfg = CandidateConfig(colagg=False, group_size=16)
+    f = extract_features(r, c, v, shape)
+    est = estimate(f, cfg)
+    cb = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                           val_dtype=np.float32,
+                           use_column_aggregation=False)
+    s = build_super_streams(cb, group_size=16)
+    measured = sum(s.padded_work().values())
+    steps = (s.num_dense_groups + s.num_panel_groups + s.num_coo_groups)
+    assert est.steps == steps
+    # balancing can cost up to one extra width bucket per group
+    assert measured <= est.padded_elems * 1.25 + 1024
+    assert est.padded_elems <= measured * 1.25 + 1024
+
+
+def test_rank_is_deterministic_and_default_first_on_ties():
+    r, c, v, shape = _coo(seed=6)
+    f = extract_features(r, c, v, shape)
+    cands = default_candidates()
+    assert cands[0] == DEFAULT_CONFIG
+    r1 = rank(f, cands)
+    r2 = rank(f, cands)
+    assert [c for c, _ in r1] == [c for c, _ in r2]
+    assert all(a[1].score <= b[1].score for a, b in zip(r1, r1[1:]))
+
+
+def test_group_size_tradeoff_visible_to_model():
+    """G=1 must lose to the occupancy heuristic on a many-block matrix
+    (step overhead), even though it minimizes padding."""
+    r, c, v, shape = _coo(seed=2, m=512, n=512)
+    f = extract_features(r, c, v, shape)
+    small_g = estimate(f, CandidateConfig(group_size=1))
+    auto_g = estimate(f, CandidateConfig())
+    assert small_g.steps > auto_g.steps
+    assert small_g.score > auto_g.score
+
+
+# ---------------------------------------------------------------------------
+# plan + cache
+# ---------------------------------------------------------------------------
+
+def test_plan_save_load_roundtrip(tmp_path):
+    plan = _mini_plan(t_spmv=1.5e-4, th1=None, th2=None)
+    path = tmp_path / "p.json"
+    plan.save(path)
+    assert Plan.load(path) == plan
+    # schema rejection
+    d = plan.to_json()
+    d["schema"] = "cb-plan/v0"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="cb-plan/v1"):
+        Plan.load(bad)
+
+
+def test_plan_is_hashable_static_arg():
+    p1, p2 = _mini_plan(), _mini_plan()
+    assert hash(p1) == hash(p2)
+    assert len({p1, p2}) == 1
+
+
+def test_content_hash_canonicalization():
+    r = np.array([3, 1, 2])
+    c = np.array([0, 1, 2])
+    v = np.array([1.0, 2.0, 3.0], np.float32)
+    h1 = matrix_content_hash(r, c, v, (4, 4))
+    perm = np.array([2, 0, 1])
+    h2 = matrix_content_hash(r[perm], c[perm], v[perm], (4, 4))
+    assert h1 == h2  # order-invariant
+    v2 = v.copy()
+    v2[0] = 9.0
+    assert matrix_content_hash(r, c, v2, (4, 4)) != h1   # value-sensitive
+    assert matrix_content_hash(r, c, v, (4, 5)) != h1    # shape-sensitive
+    assert matrix_content_hash(r, c, v, (4, 4),
+                               val_dtype=np.float64) != h1  # dtype-sensitive
+
+
+def test_plan_cache_miss_put_hit_and_corruption(tmp_path):
+    cache = PlanCache(tmp_path / "plans")
+    plan = _mini_plan(matrix_hash="a" * 64)
+    assert cache.get(plan.matrix_hash) is None
+    cache.put(plan)
+    assert cache.get(plan.matrix_hash) == plan
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert cache.hit_rate == 0.5
+
+    # corrupted file = miss, not crash
+    with open(cache.path_for("b" * 64), "w") as f:
+        f.write("{ not json")
+    assert cache.get("b" * 64) is None
+
+    # hash mismatch inside the file = miss (stale/renamed entry)
+    other = _mini_plan(matrix_hash="c" * 64)
+    other.save(cache.path_for("d" * 64))
+    assert cache.get("d" * 64) is None
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def test_search_never_regresses_padded_work_vs_default():
+    for seed in range(4):
+        r, c, v, shape = _coo(seed=seed)
+        plan = plan_search(r, c, v, shape)
+        cb_def = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                                   val_dtype=np.float32)
+        default_padded = sum(
+            build_super_streams(cb_def).padded_work().values()
+        )
+        assert plan.measured_padded_elems <= default_padded
+        assert plan.mode == "heuristic"
+
+
+def test_search_settings_thread_through():
+    r, c, v, shape = _coo(seed=1)
+    only_default = SearchSettings(candidates=(DEFAULT_CONFIG,), top_k=1)
+    plan = plan_search(r, c, v, shape, settings=only_default)
+    assert plan.block_size == 16
+    assert plan.group_size == group_size_for(16)
+    with pytest.raises(ValueError, match="unknown search mode"):
+        plan_search(r, c, v, shape,
+                    settings=SearchSettings(mode="warp-speed"))
+
+
+def test_search_single_element_matrix():
+    rows = np.array([5]); cols = np.array([3])
+    vals = np.array([2.5], np.float32)
+    plan = plan_search(rows, cols, vals, (9, 7))
+    cb = CBMatrix.from_plan(rows, cols, vals, (9, 7), plan)
+    np.testing.assert_allclose(cb.to_dense()[5, 3], 2.5)
+
+
+# ---------------------------------------------------------------------------
+# plan threading: ops / operator / sparse linear
+# ---------------------------------------------------------------------------
+
+def _planned_setup(seed=11):
+    r, c, v, shape = _coo(seed=seed)
+    plan = plan_search(r, c, v, shape)
+    cb = CBMatrix.from_plan(r, c, v, shape, plan)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(shape[1]),
+                    jnp.float32)
+    return r, c, v, shape, plan, cb, x
+
+
+def test_cb_spmv_plan_equals_group_size():
+    from repro.core.streams import build_streams
+
+    _, _, _, _, plan, cb, x = _planned_setup()
+    flat = build_streams(cb).device_put()
+    y_plan = ops.cb_spmv(flat, x, impl="reference", plan=plan)
+    y_group = ops.cb_spmv(flat, x, impl="reference",
+                          group_size=plan.group_size)
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_group))
+    with pytest.raises(ValueError, match="conflicting"):
+        ops.cb_spmv(flat, x, plan=plan, group_size=plan.group_size + 1)
+
+
+def test_cb_spmv_plan_block_size_mismatch():
+    from repro.core.streams import build_streams
+
+    r, c, v, shape, plan, cb, x = _planned_setup()
+    other_B = 8 if plan.block_size != 8 else 16
+    cb_other = CBMatrix.from_coo(r, c, v, shape, block_size=other_B,
+                                 val_dtype=np.float32)
+    flat = build_streams(cb_other).device_put()
+    with pytest.raises(ValueError, match="block_size"):
+        ops.cb_spmv(flat, x, plan=plan)
+
+
+def test_cb_spmm_plan_equals_group_size():
+    _, _, _, shape, plan, cb, _ = _planned_setup()
+    ts = tile_stream_from_cb(cb)
+    ts = jax.tree_util.tree_map(jnp.asarray, ts)
+    X = jnp.asarray(
+        np.random.default_rng(1).standard_normal((shape[1], 8)), jnp.float32
+    )
+    y_plan = ops.cb_spmm(ts, X, impl="reference", plan=plan)
+    y_group = ops.cb_spmm(ts, X, impl="reference",
+                          group_size=plan.group_size)
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_group))
+
+
+def test_operator_plan_modes(tmp_path):
+    r, c, v, shape = _coo(seed=12)
+    cb = CBMatrix.from_coo(r, c, v, shape, block_size=16,
+                           val_dtype=np.float32)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(shape[1]),
+                    jnp.float32)
+
+    cache = PlanCache(tmp_path / "plans")
+    op_auto = CBLinearOperator.from_cb(cb, plan="auto", plan_cache=cache)
+    assert op_auto.plan is not None
+    assert op_auto.block_size == op_auto.plan.block_size
+    assert op_auto.streams.group_size == op_auto.plan.group_size
+
+    # explicit Plan object path is bit-identical to the auto path
+    op_plan = CBLinearOperator.from_cb(cb, plan=op_auto.plan)
+    y_auto = np.asarray(op_auto.matvec(x, impl="reference"))
+    y_plan = np.asarray(op_plan.matvec(x, impl="reference"))
+    np.testing.assert_array_equal(y_auto, y_plan)
+
+    # tuned result matches the untuned operator's math
+    y_default = np.asarray(CBLinearOperator.from_cb(cb).matvec(
+        x, impl="reference"))
+    np.testing.assert_allclose(y_auto, y_default, rtol=1e-5, atol=1e-5)
+
+    with pytest.raises(ValueError, match="not both"):
+        CBLinearOperator.from_cb(cb, plan="auto", group_size=4)
+    with pytest.raises(ValueError, match="unknown plan mode"):
+        CBLinearOperator.from_cb(cb, plan="bogus")
+
+
+def test_sparse_linear_plan_threading():
+    import jax as _jax
+    from repro.sparse.linear import (
+        cb_linear_apply, cb_linear_init,
+    )
+
+    params, spec = cb_linear_init(
+        _jax.random.PRNGKey(0), 64, 48, block_size=16, keep_fraction=0.5
+    )
+    x = _jax.random.normal(_jax.random.PRNGKey(1), (4, 64))
+    plan = _mini_plan(block_size=16, group_size=4)
+    y_plan = cb_linear_apply(params, spec, x, plan=plan)
+    y_group = cb_linear_apply(params, spec, x, group_size=4)
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_group))
+    with pytest.raises(ValueError, match="conflicting"):
+        cb_linear_apply(params, spec, x, plan=plan, group_size=8)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.cb_matrix import CBMatrix
+from repro.core.formats import FormatThresholds
 from repro.core.streams import build_streams, build_super_streams
 from repro.core.spmv_ref import dense_oracle
 from repro.data import matrices
@@ -189,3 +190,23 @@ def test_cb_save_load_float64(tmp_path):
     cb2 = CBMatrix.load(path)
     assert cb2.val_dtype == np.dtype(np.float64)
     np.testing.assert_array_equal(cb.to_dense(), cb2.to_dense())
+
+
+@pytest.mark.parametrize("th", [
+    FormatThresholds(th0=0.3, th1=8, th2=64),     # fully explicit
+    FormatThresholds(th1=1, th2=256),             # forced-dense style
+    FormatThresholds(th0=0.05),                   # derive th1/th2 from B
+])
+def test_cb_save_load_nondefault_thresholds(tmp_path, th):
+    """Non-default (incl. autotuned) thresholds survive save/load exactly —
+    a restored plan must re-derive the same formats, not the defaults."""
+    rows, cols, vals = matrices.power_law(96, 96, seed=7)
+    cb = CBMatrix.from_coo(rows, cols, vals.astype(np.float32), (96, 96),
+                           block_size=16, val_dtype=np.float32,
+                           thresholds=th)
+    path = tmp_path / "th.npz"
+    cb.save(path)
+    cb2 = CBMatrix.load(path)
+    assert cb2.thresholds == th
+    assert cb2.thresholds.resolve(16) == th.resolve(16)
+    np.testing.assert_array_equal(cb.type_per_blk, cb2.type_per_blk)
