@@ -93,6 +93,20 @@ SECTIONS: dict[str, Section] = {
         # the acceptance bar: tuned plans never regress padded work
         geomean_max=(("padded_elems_planned", "padded_elems_default", 1.0),),
     ),
+    "dynamic": Section(
+        "Dynamic sparsity: value churn via with_values vs rebuild",
+        "benchmarks.dynamic_bench",
+        required_keys=(
+            "matrix", "nnz", "churn_steps", "t_update", "t_rebuild",
+            "update_rebuild_ratio", "plan_hit_rate", "streams_match",
+        ),
+        timing_pairs=(("t_update", "t_rebuild"),),
+        require_true=("streams_match",),
+        # 15/16 churn steps must hit the structure-keyed plan cache
+        min_values=(("plan_hit_rate", 0.9),),
+        # the acceptance bar: payload rewrite at <= 1/4 of a full rebuild
+        geomean_max=(("t_update", "t_rebuild", 0.25),),
+    ),
 }
 
 

@@ -18,8 +18,8 @@ python -m pytest "${PYTEST_ARGS[@]}"
 echo "== benchmark smoke: fig34 (distribution + balance) =="
 python -m benchmarks.run --scale small --only fig34
 
-echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune (--json + regression guard) =="
+echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic (--json + regression guard) =="
 BENCH_JSON="$(mktemp /tmp/bench_spmv.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
-python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune --json "$BENCH_JSON"
+python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic --json "$BENCH_JSON"
 python scripts/bench_guard.py "$BENCH_JSON" benchmarks/BENCH_spmv.json

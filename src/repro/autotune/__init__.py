@@ -5,8 +5,9 @@ thresholds, the th0 colagg gate, TARGET_STEP_ELEMS / MAX_GROUP_SIZE
 group sizing) into per-matrix decisions: cheap feature extraction
 (``features``), an analytical cost model over the stream builders
 (``cost``), empirical refinement of the top-k candidates (``search``),
-and a schema-versioned content-hash-keyed plan cache (``plan``) so the
-planning cost amortizes across processes. See ``autotune/README.md``.
+and a schema-versioned plan cache keyed on the canonical *structure*
+hash (``plan``) so the planning cost amortizes across processes and
+across value updates. See ``autotune/README.md``.
 """
 from .cost import (  # noqa: F401
     CandidateConfig,
@@ -25,9 +26,16 @@ from .features import (  # noqa: F401
 )
 from .plan import (  # noqa: F401
     PLAN_SCHEMA,
+    PLAN_SCHEMA_V1,
+    MatrixHashes,
     Plan,
     PlanCache,
+    canonical_triplets,
+    legacy_content_hash,
     matrix_content_hash,
+    matrix_hashes,
+    structure_hash,
+    value_hash,
 )
 from .search import (  # noqa: F401
     DEFAULT_SETTINGS,

@@ -8,15 +8,29 @@ dataclass so it can ride ``jax.jit`` static arguments directly
 (``ops.cb_spmv(..., plan=p)``).
 
 Persistence mirrors ``CBMatrix.save``/``load`` (schema string checked on
-load, version ``cb-plan/v1``) but uses JSON — a plan is a dozen scalars,
-and a human should be able to read why the planner chose what it chose.
+load, version ``cb-plan/v2``; ``cb-plan/v1`` files remain readable) but
+uses JSON — a plan is a dozen scalars, and a human should be able to
+read why the planner chose what it chose.
 
-``PlanCache`` is a directory of such files keyed by the **matrix content
-hash** (sha256 over the canonically-sorted triplets + shape + dtype), so
-planning amortizes across *processes*: a solver restart, a benchmark
-rerun, or a fleet of workers sharing a filesystem all hit the same plan
-without re-searching — the MERBIT regime (PAPERS.md) where per-matrix
-planning cost divides by thousands of reuses.
+Matrix identity is split in two:
+
+  * ``structure_hash`` — sha256 over the *canonical* sparsity pattern:
+    duplicate triplets merged, explicit zeros dropped, (row, col)-sorted
+    coordinates, plus the shape. Independent of triplet order, value
+    dtype, and the values themselves.
+  * ``value_hash``     — sha256 over the canonical-order values in the
+    plan's value dtype (dtype name included).
+
+``PlanCache`` keys plans on ``structure_hash`` alone: every CB planning
+decision (blocking, colagg, format select, Alg. 2 balance) depends only
+on the pattern, so a matrix whose *values* churn every step — the
+dynamic-sparsity regime — reuses its plan indefinitely. This fixes the
+v1 defect where any value change re-planned from scratch, and the
+explicit-zeros aliasing hazard ``CBMatrix.to_coo`` documents: the
+canonicalization inside the hash makes original triplets (with explicit
+zeros) and round-tripped triplets land on the same cache entry.
+Cross-process amortization is the MERBIT regime (PAPERS.md) where
+per-matrix planning cost divides by thousands of reuses.
 """
 from __future__ import annotations
 
@@ -24,12 +38,83 @@ import dataclasses
 import hashlib
 import json
 import os
+from typing import NamedTuple
 
 import numpy as np
 
+from repro.core import aggregation
 from repro.core.formats import FormatThresholds
 
-PLAN_SCHEMA = "cb-plan/v1"
+PLAN_SCHEMA = "cb-plan/v2"
+PLAN_SCHEMA_V1 = "cb-plan/v1"
+
+
+def canonical_triplets(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    val_dtype=np.float32,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Canonical form of a COO matrix: dedup, drop zeros, (row, col)-sort.
+
+    Duplicate coordinates are merged by summation (matching
+    ``blocking.partition_coo``) and entries whose merged value is exactly
+    zero are dropped — an explicitly-stored 0.0 does not survive a CB
+    round trip (``CBMatrix.to_coo``), so it must not contribute to the
+    matrix identity either. The result is sorted by (row, col), the same
+    order ``to_coo`` emits.
+    """
+    rows = np.ascontiguousarray(rows, np.int64)
+    cols = np.ascontiguousarray(cols, np.int64)
+    vals = np.ascontiguousarray(vals, np.dtype(val_dtype))
+    n = int(shape[1])
+    key = rows * n + cols
+    uniq, inv = np.unique(key, return_inverse=True)
+    summed = np.zeros(len(uniq), vals.dtype)
+    np.add.at(summed, inv, vals)
+    keep = summed != 0
+    uniq, summed = uniq[keep], summed[keep]
+    return uniq // n, uniq % n, summed
+
+
+class MatrixHashes(NamedTuple):
+    """Both halves of a matrix's identity plus its canonical nnz."""
+
+    structure: str
+    value: str
+    nnz: int
+
+
+def matrix_hashes(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    val_dtype=np.float32,
+) -> MatrixHashes:
+    """Compute (structure_hash, value_hash, canonical nnz) in one pass."""
+    r, c, v = canonical_triplets(rows, cols, vals, shape, val_dtype)
+    hs = hashlib.sha256()
+    hs.update(b"cb-structure/v2")
+    hs.update(np.asarray([shape[0], shape[1], len(r)], np.int64).tobytes())
+    hs.update(r.tobytes())
+    hs.update(c.tobytes())
+    hv = hashlib.sha256()
+    hv.update(b"cb-values/v2")
+    hv.update(np.dtype(val_dtype).name.encode())
+    hv.update(v.tobytes())
+    return MatrixHashes(hs.hexdigest(), hv.hexdigest(), len(r))
+
+
+def structure_hash(rows, cols, vals, shape, val_dtype=np.float32) -> str:
+    """sha256 of the canonical sparsity *pattern* (see module docstring)."""
+    return matrix_hashes(rows, cols, vals, shape, val_dtype).structure
+
+
+def value_hash(rows, cols, vals, shape, val_dtype=np.float32) -> str:
+    """sha256 of the canonical-order *values* in ``val_dtype``."""
+    return matrix_hashes(rows, cols, vals, shape, val_dtype).value
 
 
 def matrix_content_hash(
@@ -39,12 +124,29 @@ def matrix_content_hash(
     shape: tuple[int, int],
     val_dtype=np.float32,
 ) -> str:
-    """sha256 of the matrix *content*, independent of triplet order.
+    """sha256 of the full matrix *content* (structure + values).
 
-    Triplets are canonically (row, col)-sorted before hashing, so the
-    hash of a matrix is stable across whatever order a loader or
-    ``CBMatrix.to_coo`` emitted. Values are hashed in the plan's value
-    dtype — the dtype a plan executes in is part of its identity.
+    The combined identity: changes with the pattern, the values, or the
+    value dtype, but not with triplet order, duplicate splitting, or
+    explicit zeros (the canonicalization of ``canonical_triplets`` is
+    applied first). Use ``structure_hash`` when only the pattern matters
+    — the plan cache does.
+    """
+    h = matrix_hashes(rows, cols, vals, shape, val_dtype)
+    return hashlib.sha256(f"{h.structure}:{h.value}".encode()).hexdigest()
+
+
+def legacy_content_hash(
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    shape: tuple[int, int],
+    val_dtype=np.float32,
+) -> str:
+    """The exact ``cb-plan/v1`` content hash (no canonicalization).
+
+    Kept bit-compatible with the v1 algorithm so a v2 lookup can probe
+    for plan files written by v1 processes and migrate them.
     """
     rows = np.ascontiguousarray(rows, np.int64)
     cols = np.ascontiguousarray(cols, np.int64)
@@ -63,10 +165,10 @@ def matrix_content_hash(
 class Plan:
     """One matrix's tuned CB configuration (see module docstring)."""
 
-    matrix_hash: str
+    structure_hash: str
     shape: tuple[int, int]
-    nnz: int
-    val_dtype: str                  # numpy dtype name
+    nnz: int                        # canonical nnz (dedup, zero-dropped)
+    val_dtype: str                  # numpy dtype name the plan was tuned in
     block_size: int
     th0: float
     th1: int | None                 # None = derive from B (formats.resolve)
@@ -79,10 +181,39 @@ class Plan:
     measured_padded_elems: int
     measured_steps: int
     t_spmv: float | None = None     # refinement timing (None in heuristic mode)
+    value_hash: str | None = None   # values the measurements ran with (info)
 
     @property
     def thresholds(self) -> FormatThresholds:
         return FormatThresholds(th0=self.th0, th1=self.th1, th2=self.th2)
+
+    # ------------------------------------------------------------------
+    def check_valid(self, shape=None, nnz=None) -> str | None:
+        """Validate the plan, optionally against a matrix.
+
+        Returns a human-readable reason string when the plan is
+        internally inconsistent (thresholds that do not resolve at its
+        block size, nonsense block/group sizes) or does not match the
+        matrix it is about to be applied to — ``None`` when it is usable.
+        ``PlanCache.get`` treats a non-None reason as a stale miss;
+        ``CBMatrix.from_plan`` raises it.
+        """
+        if len(self.shape) != 2 or min(self.shape) < 1:
+            return f"plan shape {self.shape!r} is not a positive 2-D shape"
+        if self.block_size < 1:
+            return f"plan block_size {self.block_size} < 1"
+        if self.group_size < 1:
+            return f"plan group_size {self.group_size} < 1"
+        try:
+            aggregation.coord_dtype(self.block_size)
+            self.thresholds.resolve(self.block_size)
+        except (ValueError, TypeError) as e:
+            return f"plan thresholds/block size invalid: {e}"
+        if shape is not None and tuple(int(v) for v in shape) != tuple(self.shape):
+            return f"plan was made for shape {self.shape}, got {tuple(shape)}"
+        if nnz is not None and int(nnz) != int(self.nnz):
+            return f"plan was made for nnz {self.nnz}, got {int(nnz)}"
+        return None
 
     # ------------------------------------------------------------------
     def to_json(self) -> dict:
@@ -94,8 +225,18 @@ class Plan:
     @classmethod
     def from_json(cls, d: dict) -> "Plan":
         schema = d.get("schema")
-        if schema != PLAN_SCHEMA:
-            raise ValueError(f"plan schema {schema!r} != {PLAN_SCHEMA!r}")
+        if schema == PLAN_SCHEMA_V1:
+            # v1 read-compat: the single content hash becomes the
+            # structure key (PlanCache re-keys migrated entries on the
+            # true structure hash; see PlanCache.get).
+            d = dict(d)
+            d["structure_hash"] = d.pop("matrix_hash")
+            d.setdefault("value_hash", None)
+        elif schema != PLAN_SCHEMA:
+            raise ValueError(
+                f"plan schema {schema!r} is neither {PLAN_SCHEMA!r} nor "
+                f"{PLAN_SCHEMA_V1!r}"
+            )
         fields = {f.name for f in dataclasses.fields(cls)}
         kw = {k: v for k, v in d.items() if k in fields}
         kw["shape"] = tuple(int(v) for v in kw["shape"])
@@ -112,11 +253,21 @@ class Plan:
 
 
 class PlanCache:
-    """Directory-backed plan store keyed by matrix content hash.
+    """Directory-backed plan store keyed by **structure hash**.
 
-    ``get`` treats an unreadable or schema-mismatched file as a miss
-    (a newer schema simply re-plans rather than erroring a fleet), and
-    counts hits/misses so benchmark sections can report the hit rate.
+    ``get`` probes the structure-keyed ``cb-plan/v2`` file first and
+    falls back to a caller-supplied legacy ``cb-plan/v1`` content-hash
+    key; a legacy hit is re-keyed on the structure hash and persisted
+    under the v2 schema, so the old file serves exactly one migration.
+    Either way a logical lookup counts **exactly one** hit or miss —
+    never once per probe level.
+
+    An unreadable or schema-mismatched file is a miss (a newer schema
+    simply re-plans rather than erroring a fleet). A file that loads but
+    fails ``Plan.check_valid`` against the requested matrix — wrong
+    shape, wrong nnz, thresholds that no longer resolve — is a *stale*
+    miss, counted separately in ``stale`` so fleets can alarm on cache
+    poisoning instead of silently re-planning forever.
     """
 
     def __init__(self, directory):
@@ -124,26 +275,52 @@ class PlanCache:
         os.makedirs(self.directory, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        self.stale = 0
 
-    def path_for(self, matrix_hash: str) -> str:
-        return os.path.join(self.directory, f"{matrix_hash}.plan.json")
+    def path_for(self, structure_hash: str) -> str:
+        return os.path.join(self.directory, f"{structure_hash}.plan.json")
 
-    def get(self, matrix_hash: str) -> Plan | None:
-        path = self.path_for(matrix_hash)
+    def _load(self, key: str) -> Plan | None:
+        """Load without touching counters; None on any read failure."""
         try:
-            plan = Plan.load(path)
+            return Plan.load(self.path_for(key))
         except (OSError, ValueError, KeyError, TypeError,
                 json.JSONDecodeError):
+            return None
+
+    def get(
+        self,
+        structure_hash: str,
+        *,
+        legacy_hash: str | None = None,
+        shape: tuple[int, int] | None = None,
+        nnz: int | None = None,
+    ) -> Plan | None:
+        migrated = False
+        plan = self._load(structure_hash)
+        if plan is not None and plan.structure_hash != structure_hash:
+            plan = None  # alien payload under this file name
+        if plan is None and legacy_hash and legacy_hash != structure_hash:
+            legacy = self._load(legacy_hash)
+            if legacy is not None:
+                plan = dataclasses.replace(
+                    legacy, structure_hash=structure_hash
+                )
+                migrated = True
+        if plan is None:
             self.misses += 1
             return None
-        if plan.matrix_hash != matrix_hash:
+        if plan.check_valid(shape=shape, nnz=nnz) is not None:
+            self.stale += 1
             self.misses += 1
             return None
+        if migrated:
+            self.put(plan)
         self.hits += 1
         return plan
 
     def put(self, plan: Plan) -> str:
-        path = self.path_for(plan.matrix_hash)
+        path = self.path_for(plan.structure_hash)
         plan.save(path)
         return path
 

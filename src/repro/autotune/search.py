@@ -45,7 +45,7 @@ from .cost import (
     estimate, rank,
 )
 from .features import extract_features
-from .plan import Plan, PlanCache, matrix_content_hash
+from .plan import Plan, PlanCache, legacy_content_hash, matrix_hashes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,9 +141,18 @@ def plan_search(
     """Pick a per-matrix CB configuration (see module docstring)."""
     settings = DEFAULT_SETTINGS if settings is None else settings
     val_dtype = np.dtype(val_dtype)
-    mhash = matrix_content_hash(rows, cols, vals, shape, val_dtype)
+    hashes = matrix_hashes(rows, cols, vals, shape, val_dtype)
     if cache is not None:
-        hit = cache.get(mhash)
+        # Structure-keyed lookup: value churn reuses the plan. The v1
+        # content hash rides along so pre-split plan files still hit
+        # (and migrate) instead of forcing one last re-plan.
+        hit = cache.get(
+            hashes.structure,
+            legacy_hash=legacy_content_hash(rows, cols, vals, shape,
+                                            val_dtype),
+            shape=shape,
+            nnz=hashes.nnz,
+        )
         if hit is not None:
             return hit
 
@@ -180,9 +189,10 @@ def plan_search(
 
     predicted = estimate(features, best.config)
     plan = Plan(
-        matrix_hash=mhash,
+        structure_hash=hashes.structure,
+        value_hash=hashes.value,
         shape=tuple(int(v) for v in shape),
-        nnz=features.nnz,
+        nnz=hashes.nnz,
         val_dtype=val_dtype.name,
         block_size=best.config.block_size,
         th0=best.config.thresholds.th0,

@@ -18,5 +18,5 @@ from .balance import (  # noqa: F401
     tb_load_balance,
     tb_load_stddev,
 )
-from .cb_matrix import CBMatrix  # noqa: F401
+from .cb_matrix import CBMatrix, ValueLayout  # noqa: F401
 from .spmv_ref import dense_oracle, spmm_ref, spmv_ref  # noqa: F401

@@ -22,6 +22,20 @@ import numpy as np
 from . import aggregation, balance, blocking, column_agg, formats
 
 
+@dataclasses.dataclass(frozen=True)
+class ValueLayout:
+    """The once-per-structure value-scatter index (``value_layout``).
+
+    ``byte_pos[i]`` is the first byte of canonical element ``i``'s value
+    inside ``CBMatrix.packed``; ``keys[i]`` is its ``row * n + col`` key
+    in canonical ascending order.
+    """
+
+    count: int
+    byte_pos: np.ndarray   # (count,) int64
+    keys: np.ndarray       # (count,) int64
+
+
 @dataclasses.dataclass
 class CBMatrix:
     shape: tuple[int, int]
@@ -160,11 +174,23 @@ class CBMatrix:
         is passed as an explicit bool — rebuilding from a cached plan is
         bit-identical to the freshly-planned build even if the th0 gate
         would flip on a re-probe.
+
+        The plan is validated before any work runs: shape against the
+        matrix, plus internal consistency (thresholds must resolve at
+        the plan's block size) — a stale or hand-edited plan fails here
+        with a reason instead of mis-building silently. The cache path
+        (``autotune.PlanCache.get``) performs the same validation and
+        treats failures as a counted miss.
         """
-        if tuple(shape) != tuple(plan.shape):
-            raise ValueError(
-                f"plan was made for shape {plan.shape}, got {tuple(shape)}"
-            )
+        checker = getattr(plan, "check_valid", None)
+        if checker is not None:
+            reason = checker(shape=shape)
+        else:
+            reason = (None if tuple(shape) == tuple(plan.shape) else
+                      f"plan was made for shape {plan.shape}, "
+                      f"got {tuple(shape)}")
+        if reason is not None:
+            raise ValueError(reason)
         return cls.from_coo(
             rows, cols, vals, shape,
             block_size=plan.block_size,
@@ -292,10 +318,13 @@ class CBMatrix:
         Caveat: *explicitly stored zeros* do not survive. A 0.0 value
         inside a dense-format block is indistinguishable from structural
         padding in the packed tile (inherent to the CB byte format, same
-        as ``to_dense``), so such entries are dropped — meaning the
-        autotuner's content hash of ``to_coo`` output can differ from a
-        hash of original triplets that carried explicit zeros (a cache
-        miss, never a wrong plan).
+        as ``to_dense``), so such entries are dropped. The autotuner's
+        hashes canonicalize (drop explicit zeros) for exactly this
+        reason, so original triplets and round-tripped triplets land on
+        the same plan-cache entry either way.
+
+        The (row, col)-sorted output order is the matrix's *canonical
+        value order* — the order ``update_values`` consumes.
         """
         rs, cs, vs = [], [], []
         B = self.block_size
@@ -311,6 +340,136 @@ class CBMatrix:
         v_all = np.concatenate(vs)
         order = np.lexsort((c_all, r_all))
         return r_all[order], c_all[order], v_all[order]
+
+    # ------------------------------------------------------------------
+    # Dynamic-sparsity fast path: rewrite values without re-planning.
+    #
+    # Every structural decision (blocking, colagg, format select, Alg. 2
+    # balance, byte layout) depends only on the sparsity pattern, so a
+    # matrix whose values churn can keep its entire CB structure and
+    # scatter fresh values straight into the packed buffer. The scatter
+    # index — one byte offset per canonical element — is recorded once
+    # per structure and reused for every update.
+    # ------------------------------------------------------------------
+
+    def value_layout(self) -> "ValueLayout":
+        """The value-scatter index: canonical order -> packed byte offsets.
+
+        Walks the balanced slots once, recording for every *recoverable*
+        element its global (row, col) key and the byte offset of its
+        value inside ``packed`` (replicating ``aggregation``'s intra-block
+        layouts), then sorts by key into the canonical (row, col) order
+        ``to_coo`` emits. Cached on the instance; ``update_values``
+        propagates the cache to the copies it returns, so a churn loop
+        pays the walk exactly once.
+        """
+        layout = getattr(self, "_value_layout_cache", None)
+        if layout is not None:
+            return layout
+        B = self.block_size
+        vsize = self.val_dtype.itemsize
+        n = self.shape[1]
+        cdt_size = aggregation.coord_dtype(B).itemsize
+        rp_size = (B + 1) * aggregation._csr_rowptr_dtype(B).itemsize
+        pos_l: list[np.ndarray] = []
+        key_l: list[np.ndarray] = []
+        for i in range(self.num_slots):
+            nnz = int(self.nnz_per_blk[i])
+            if nnz == 0:
+                continue
+            fmt = int(self.type_per_blk[i])
+            vp = int(self.vp_per_blk[i])
+            r, c, v = aggregation.unpack_block(
+                self.packed, vp, fmt, nnz, B, self.val_dtype
+            )
+            brow = int(self.blk_row_idx[i])
+            bcol = int(self.blk_col_idx[i])
+            if fmt == formats.FMT_DENSE:
+                pos = vp + (r.astype(np.int64) * B + c) * vsize
+            else:
+                head = (nnz * cdt_size if fmt == formats.FMT_COO
+                        else rp_size + nnz * cdt_size)
+                voff = vp + head + (-head) % vsize
+                pos = voff + np.arange(len(v), dtype=np.int64) * vsize
+            gr = brow * B + r.astype(np.int64)
+            gc = self.global_x_index(brow, bcol, c)
+            pos_l.append(pos)
+            key_l.append(gr * n + gc)
+        if pos_l:
+            pos = np.concatenate(pos_l)
+            keys = np.concatenate(key_l)
+        else:
+            pos = np.zeros(0, np.int64)
+            keys = np.zeros(0, np.int64)
+        order = np.argsort(keys, kind="stable")
+        layout = ValueLayout(count=len(pos), byte_pos=pos[order],
+                             keys=keys[order])
+        self._value_layout_cache = layout
+        return layout
+
+    def update_values(self, new_vals: np.ndarray) -> "CBMatrix":
+        """Rewrite the packed values in place of a full rebuild.
+
+        ``new_vals`` is one value per element in **canonical order** —
+        the (row, col)-sorted order ``to_coo`` returns (use
+        :meth:`update_from_coo` for arbitrary triplet order). Returns a
+        new ``CBMatrix`` sharing every metadata array (same blocking,
+        colagg, formats, balance, byte layout) with only the packed
+        buffer replaced — no re-planning, re-balancing, or re-selection
+        runs.
+
+        Writing an exact 0.0 into a dense-format slot makes that element
+        unrecoverable on the next ``to_coo`` (the format cannot
+        distinguish it from padding); keep update values nonzero when
+        round-trip fidelity matters.
+        """
+        layout = self.value_layout()
+        vals = np.ascontiguousarray(new_vals, self.val_dtype)
+        if vals.shape != (layout.count,):
+            raise ValueError(
+                f"update_values expects {layout.count} canonical values "
+                f"(see to_coo), got array of shape {vals.shape}"
+            )
+        vsize = self.val_dtype.itemsize
+        packed = self.packed.copy()
+        idx = layout.byte_pos[:, None] + np.arange(vsize, dtype=np.int64)
+        packed[idx] = vals.view(np.uint8).reshape(-1, vsize)
+        new = dataclasses.replace(self, packed=packed)
+        # The scatter index is pattern-derived; hand it to the copy so
+        # chained updates never re-walk the blocks.
+        new._value_layout_cache = layout
+        return new
+
+    def update_from_coo(
+        self,
+        rows: np.ndarray,
+        cols: np.ndarray,
+        vals: np.ndarray,
+    ) -> "CBMatrix":
+        """``update_values`` for triplets in arbitrary order.
+
+        Duplicates are merged by summation (matching ``from_coo``); the
+        resulting coordinate set must equal this matrix's structure
+        exactly — structure drift (new or missing coordinates) raises,
+        because only a full ``from_coo`` rebuild can re-plan the
+        blocking for a changed pattern.
+        """
+        layout = self.value_layout()
+        n = self.shape[1]
+        rows = np.ascontiguousarray(rows, np.int64)
+        cols = np.ascontiguousarray(cols, np.int64)
+        vals = np.ascontiguousarray(vals, self.val_dtype)
+        key = rows * n + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        summed = np.zeros(len(uniq), self.val_dtype)
+        np.add.at(summed, inv, vals)
+        if len(uniq) != layout.count or not np.array_equal(uniq, layout.keys):
+            raise ValueError(
+                "sparsity pattern differs from this CBMatrix's structure; "
+                "update_from_coo only rewrites values — rebuild with "
+                "from_coo (and re-plan) for structure drift"
+            )
+        return self.update_values(summed)
 
     def global_x_index(self, brow: int, bcol: int, local_c: np.ndarray) -> np.ndarray:
         """Map (block, local col) -> original global column of x."""

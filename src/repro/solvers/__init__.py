@@ -10,14 +10,18 @@ from .operator import CBLinearOperator  # noqa: F401
 from .krylov import SolveResult, bicgstab, cg, gmres  # noqa: F401
 from .precond import (  # noqa: F401
     BlockJacobiPreconditioner,
+    DiagScatter,
     IdentityPreconditioner,
     JacobiPreconditioner,
     block_jacobi,
+    diag_scatter,
     jacobi,
 )
 from .eigen import (  # noqa: F401
     EigenResult,
+    EvolvingPageRank,
     chebyshev_subspace,
+    evolving_pagerank,
     pagerank,
     pagerank_operator,
     power_iteration,

@@ -171,6 +171,110 @@ def pagerank_operator(
     return op, dangling
 
 
+# ---------------------------------------------------------------------------
+# Time-evolving PageRank: fixed link structure, churning edge weights.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class EvolvingPageRank:
+    """PageRank over a fixed edge set whose *weights* change per step.
+
+    The dynamic-sparsity showcase: a web/interaction graph where links
+    persist but their strengths drift (click counts, decayed activity).
+    The transition structure — blocking, colagg, formats, Alg. 2 balance,
+    stream packing — is preprocessed ONCE (``build``); each step only
+    renormalizes the new weights into transition probabilities and
+    scatters them into the operator's streams (``with_values``), so the
+    per-step cost is a value scatter plus the damped power iteration,
+    never a CB rebuild. Weights must stay positive: a zero weight is
+    structure drift (a vanished edge) and needs a fresh ``build``.
+    """
+
+    op: CBLinearOperator      # updatable P^T operator (built once)
+    dangling: jax.Array       # structural: nodes with no outgoing edges
+    n: int
+    edge_src: np.ndarray      # unique edge sources
+    edge_dst: np.ndarray      # unique edge destinations
+    edge_map: np.ndarray      # original edge index -> unique edge index
+    canon_order: np.ndarray   # unique-edge order -> canonical value order
+
+    @classmethod
+    def build(
+        cls,
+        src: np.ndarray,
+        dst: np.ndarray,
+        n: int,
+        *,
+        block_size: int = 16,
+        group_size: int | None = None,
+    ) -> "EvolvingPageRank":
+        """Preprocess the edge structure once (unit initial weights)."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        key = src * n + dst
+        uk, edge_map = np.unique(key, return_inverse=True)
+        src_u, dst_u = uk // n, uk % n
+        outdeg = np.bincount(src_u, minlength=n).astype(np.float64)
+        vals = (1.0 / outdeg[src_u]).astype(np.float32)
+        cb = CBMatrix.from_coo(dst_u, src_u, vals, (n, n),
+                               block_size=block_size, val_dtype=np.float32)
+        op = CBLinearOperator.from_cb(cb, group_size=group_size,
+                                      updatable=True)
+        # canonical (to_coo) order of the (row=dst, col=src) matrix
+        canon_order = np.lexsort((src_u, dst_u))
+        return cls(
+            op=op, dangling=jnp.asarray(outdeg == 0, jnp.float32), n=n,
+            edge_src=src_u, edge_dst=dst_u, edge_map=edge_map,
+            canon_order=canon_order,
+        )
+
+    def canonical_values(self, weights: np.ndarray) -> np.ndarray:
+        """Per-original-edge weights -> canonical transition values."""
+        w = np.asarray(weights, np.float64)
+        if w.shape != self.edge_map.shape:
+            raise ValueError(
+                f"expected one weight per original edge "
+                f"({self.edge_map.shape[0]}), got shape {w.shape}"
+            )
+        if not np.all(w > 0):
+            raise ValueError(
+                "edge weights must stay positive — a zero weight removes "
+                "the edge (structure drift); rebuild instead"
+            )
+        w_u = np.zeros(len(self.edge_src), np.float64)
+        np.add.at(w_u, self.edge_map, w)
+        outsum = np.zeros(self.n, np.float64)
+        np.add.at(outsum, self.edge_src, w_u)
+        vals = (w_u / outsum[self.edge_src]).astype(np.float32)
+        return vals[self.canon_order]
+
+    def step(self, weights: np.ndarray, **pagerank_kwargs) -> EigenResult:
+        """Rank under fresh weights: value scatter + power iteration.
+
+        The updated operator shares the original's static metadata
+        object-for-object, so the jitted ``pagerank`` while-loop traces
+        once and re-executes for every step.
+        """
+        op = self.op.with_values(self.canonical_values(weights))
+        return pagerank(op, self.dangling, **pagerank_kwargs)
+
+
+def evolving_pagerank(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n: int,
+    weight_steps,
+    *,
+    block_size: int = 16,
+    group_size: int | None = None,
+    **pagerank_kwargs,
+) -> list[EigenResult]:
+    """Run PageRank over a sequence of weight snapshots (one build)."""
+    ev = EvolvingPageRank.build(src, dst, n, block_size=block_size,
+                                group_size=group_size)
+    return [ev.step(w, **pagerank_kwargs) for w in weight_steps]
+
+
 @functools.partial(jax.jit, static_argnames=("maxiter", "impl", "interpret"))
 def pagerank(
     A: CBLinearOperator,

@@ -33,10 +33,15 @@ import jax.numpy as jnp
 from repro.core.cb_matrix import CBMatrix
 from repro.core.streams import (
     SuperBlockStreams,
+    SuperStreamUpdater,
     SuperTileStream,
+    SuperTileUpdater,
     build_super_streams,
     build_transposed_super_streams,
+    super_stream_updater,
     super_tile_stream_from_cb,
+    super_tile_updater,
+    transposed_super_stream_updater,
 )
 from repro.kernels import ops
 
@@ -61,6 +66,13 @@ class CBLinearOperator:
     tiles: SuperTileStream | None = None
     # -- static (autotune) -----------------------------------------------
     plan: object | None = None       # the Plan that shaped the streams
+    # -- static (dynamic sparsity) ---------------------------------------
+    # Value-scatter updaters recorded at build time (``updatable=True``).
+    # They are pattern-derived constants — identity-hashed metadata, so
+    # ``with_values`` copies share them and jit never retraces on update.
+    updater: SuperStreamUpdater | None = None
+    updater_T: SuperStreamUpdater | None = None
+    tile_updater: SuperTileUpdater | None = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -74,6 +86,7 @@ class CBLinearOperator:
         plan: object | None = None,
         plan_cache=None,
         plan_settings=None,
+        updatable: bool = False,
     ) -> "CBLinearOperator":
         """Build every requested stream once (host-side, plan time).
 
@@ -99,6 +112,12 @@ class CBLinearOperator:
 
         A tuned plan owns the group-size decision, so combining ``plan``
         with an explicit ``group_size`` is an error.
+
+        ``updatable=True`` additionally records a value-scatter updater
+        per requested stream (``streams.super_stream_updater`` and
+        friends), enabling :meth:`with_values` — value churn without
+        re-planning. Recording costs one extra shadow build per stream
+        at construction, so it defaults OFF.
         """
         if plan is not None:
             if group_size is not None:
@@ -127,6 +146,40 @@ class CBLinearOperator:
             tiles=(super_tile_stream_from_cb(cb, group_size=group_size)
                    if with_matmat else None),
             plan=plan,
+            updater=(super_stream_updater(cb, group_size=group_size)
+                     if updatable else None),
+            updater_T=(transposed_super_stream_updater(cb,
+                                                       group_size=group_size)
+                       if updatable and with_rmatvec else None),
+            tile_updater=(super_tile_updater(cb, group_size=group_size)
+                          if updatable and with_matmat else None),
+        )
+
+    # ------------------------------------------------------------------
+    def with_values(self, canonical_vals) -> "CBLinearOperator":
+        """The dynamic-sparsity fast path: same structure, fresh values.
+
+        ``canonical_vals`` is one value per matrix element in the
+        canonical ``CBMatrix.to_coo`` order. Returns an operator reusing
+        every structural decision — plan, blocking, colagg, formats,
+        Alg. 2 balance, stream geometry, and the updaters themselves —
+        with only the stream payloads rewritten (forward, transposed and
+        tile payloads alike). No re-planning or re-balancing runs, and
+        because the static metadata is shared object-for-object, jitted
+        solvers keep their traces across updates.
+        """
+        if self.updater is None:
+            raise ValueError(
+                "operator was built with updatable=False; rebuild with "
+                "CBLinearOperator.from_cb(cb, updatable=True)"
+            )
+        return dataclasses.replace(
+            self,
+            streams=self.updater.apply(canonical_vals),
+            streams_T=(self.updater_T.apply(canonical_vals)
+                       if self.updater_T is not None else self.streams_T),
+            tiles=(self.tile_updater.apply(canonical_vals)
+                   if self.tile_updater is not None else self.tiles),
         )
 
     # ------------------------------------------------------------------
@@ -182,5 +235,6 @@ class CBLinearOperator:
 jax.tree_util.register_dataclass(
     CBLinearOperator,
     data_fields=["streams", "streams_T", "tiles"],
-    meta_fields=["shape", "block_size", "nnz", "plan"],
+    meta_fields=["shape", "block_size", "nnz", "plan",
+                 "updater", "updater_T", "tile_updater"],
 )

@@ -99,21 +99,18 @@ def _diag_blocks(cb: CBMatrix) -> np.ndarray:
     return D
 
 
-def jacobi(cb: CBMatrix) -> JacobiPreconditioner:
-    """Point-Jacobi from the CB diagonal (zero diagonals act as identity)."""
-    m = cb.shape[0]
-    diag = np.einsum("bii->bi", _diag_blocks(cb)).reshape(-1)[:m]
+def _jacobi_from_diag(D: np.ndarray, m: int) -> JacobiPreconditioner:
+    diag = np.einsum("bii->bi", D).reshape(-1)[:m]
     inv = np.where(diag != 0.0, 1.0 / np.where(diag != 0.0, diag, 1.0), 1.0)
     return JacobiPreconditioner(inv_diag=jnp.asarray(inv, jnp.float32))
 
 
-def block_jacobi(cb: CBMatrix) -> BlockJacobiPreconditioner:
-    """Block-Jacobi from the materialized CB diagonal tiles."""
-    B = cb.block_size
-    m = cb.shape[0]
-    D = _diag_blocks(cb)
+def _block_jacobi_from_diag(
+    D: np.ndarray, m: int, block_size: int
+) -> BlockJacobiPreconditioner:
     # Identity rows where the block row is entirely zero (incl. the ragged
     # padding rows of the last block) keep every block invertible.
+    D = D.copy()
     dead = ~np.any(D != 0.0, axis=2)  # (mb, B)
     bidx, ridx = np.nonzero(dead)
     D[bidx, ridx, ridx] = 1.0
@@ -122,5 +119,81 @@ def block_jacobi(cb: CBMatrix) -> BlockJacobiPreconditioner:
     except np.linalg.LinAlgError:
         inv = np.stack([np.linalg.pinv(blk) for blk in D])
     return BlockJacobiPreconditioner(
-        m=m, block_size=B, inv_blocks=jnp.asarray(inv, jnp.float32)
+        m=m, block_size=block_size, inv_blocks=jnp.asarray(inv, jnp.float32)
+    )
+
+
+def jacobi(cb: CBMatrix) -> JacobiPreconditioner:
+    """Point-Jacobi from the CB diagonal (zero diagonals act as identity)."""
+    return _jacobi_from_diag(_diag_blocks(cb), cb.shape[0])
+
+
+def block_jacobi(cb: CBMatrix) -> BlockJacobiPreconditioner:
+    """Block-Jacobi from the materialized CB diagonal tiles."""
+    return _block_jacobi_from_diag(_diag_blocks(cb), cb.shape[0],
+                                   cb.block_size)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-sparsity path: re-invert only the diagonal payloads.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DiagScatter:
+    """Pattern-derived map: canonical values -> (mb, B, B) block diagonal.
+
+    Which canonical elements land in the block diagonal — and where — is
+    pure structure, so it is recorded once (``diag_scatter``) and a value
+    update only scatters fresh payloads and re-inverts: no CB block walk
+    re-runs. ``jacobi``/``block_jacobi`` on the updated values are
+    bit-identical to rebuilding the preconditioner from
+    ``cb.update_values(vals)``.
+    """
+
+    m: int
+    block_size: int
+    mb: int
+    val_dtype: np.dtype
+    flat_idx: np.ndarray   # (k,) int64 — flat index into (mb, B, B)
+    src: np.ndarray        # (k,) int64 — canonical value index
+
+    def _diag(self, canonical_vals) -> np.ndarray:
+        B = self.block_size
+        vals = np.ascontiguousarray(canonical_vals, self.val_dtype)
+        D = np.zeros((self.mb, B, B), np.float64)
+        D.reshape(-1)[self.flat_idx] = vals[self.src].astype(np.float64)
+        return D
+
+    def jacobi(self, canonical_vals) -> JacobiPreconditioner:
+        """Point-Jacobi for fresh canonical values (structure reused)."""
+        return _jacobi_from_diag(self._diag(canonical_vals), self.m)
+
+    def block_jacobi(self, canonical_vals) -> BlockJacobiPreconditioner:
+        """Block-Jacobi for fresh canonical values (re-inversion only)."""
+        return _block_jacobi_from_diag(self._diag(canonical_vals), self.m,
+                                       self.block_size)
+
+
+def diag_scatter(cb: CBMatrix) -> DiagScatter:
+    """Record once which canonical elements feed the block diagonal.
+
+    Derived straight from the value layout's global (row, col) keys —
+    coordinates are unique after CB canonicalization, so the scatter is
+    a plain assignment (no accumulation), matching ``_diag_blocks``'s
+    ``np.add.at`` over unique positions exactly.
+    """
+    layout = cb.value_layout()
+    B = cb.block_size
+    m, n = cb.shape
+    mb = -(-m // B)
+    r_g = layout.keys // n
+    c_g = layout.keys % n
+    brow = r_g // B
+    lo = brow * B
+    sel = (c_g >= lo) & (c_g < lo + B)
+    src = np.flatnonzero(sel)
+    flat = ((brow[sel] * B + (r_g[sel] - lo[sel])) * B + (c_g[sel] - lo[sel]))
+    return DiagScatter(
+        m=m, block_size=B, mb=mb, val_dtype=np.dtype(cb.val_dtype),
+        flat_idx=flat.astype(np.int64), src=src.astype(np.int64),
     )

@@ -1,3 +1,17 @@
 """CB block-sparse weight integration for the model stack."""
-from .linear import CBLinearSpec, cb_linear_apply, cb_linear_init  # noqa: F401
-from .prune import block_magnitude_prune, block_sparsity_pattern  # noqa: F401
+from .linear import (  # noqa: F401
+    CBLinearSpec,
+    cb_linear_apply,
+    cb_linear_init,
+    dense_equivalent,
+    gather_tiles,
+    spec_block_mask,
+    spec_from_mask,
+)
+from .prune import (  # noqa: F401
+    block_magnitude_prune,
+    block_sparsity_pattern,
+    refreeze_due,
+    refreeze_spec,
+    refreeze_training_step,
+)

@@ -124,6 +124,64 @@ def cb_spec_random(
     )
 
 
+def spec_from_mask(
+    mask: np.ndarray,
+    in_features: int,
+    out_features: int,
+    *,
+    block_size: int,
+    keep_fraction: float,
+) -> CBLinearSpec:
+    """Build a spec straight from a boolean (mb, nb) block mask.
+
+    The shared structural constructor behind ``cb_linear_init`` and the
+    mask-refreeze path (``prune.refreeze_spec``): everything downstream of
+    the mask — tile order (block-row-major), row-coverage padding, and the
+    transposed-stream permutation — is derived here, so both entry points
+    agree on the stream layout bit-for-bit.
+    """
+    B = block_size
+    mb, nb = -(-out_features // B), -(-in_features // B)
+    mask = np.asarray(mask, bool)
+    if mask.shape != (mb, nb):
+        raise ValueError(
+            f"mask shape {mask.shape} != block grid ({mb}, {nb}) for "
+            f"({out_features}, {in_features}) at B={B}"
+        )
+    uncovered = np.flatnonzero(~mask.any(axis=1))
+    if len(uncovered):
+        # coverage pad at bcol=0, mirroring build_tile_stream's padding
+        mask = mask.copy()
+        mask[uncovered, 0] = True
+    brow, bcol = np.nonzero(mask)  # row-major == block-row-major order
+    brow = brow.astype(np.int32)
+    bcol = bcol.astype(np.int32)
+    t_perm, browT, bcolT = _transpose_stream(brow, bcol, nb)
+    return CBLinearSpec(
+        in_features=in_features, out_features=out_features,
+        block_size=B, keep_fraction=keep_fraction,
+        brow=brow, bcol=bcol, mb=mb, nb=nb,
+        t_perm=t_perm, browT=browT, bcolT=bcolT,
+    )
+
+
+def spec_block_mask(spec: CBLinearSpec) -> np.ndarray:
+    """The spec's boolean (mb, nb) block mask (inverse of spec_from_mask)."""
+    mask = np.zeros((spec.mb, spec.nb), bool)
+    mask[spec.brow, spec.bcol] = True
+    return mask
+
+
+def gather_tiles(a: np.ndarray, spec: CBLinearSpec) -> np.ndarray:
+    """Extract the (nt, B, B) tile stack of dense ``A`` (out, in) at the
+    spec's block slots — entries outside the mask are dropped (pruned)."""
+    B = spec.block_size
+    ap = np.zeros((spec.mb * B, spec.nb * B), a.dtype)
+    ap[: a.shape[0], : a.shape[1]] = a
+    blocks = ap.reshape(spec.mb, B, spec.nb, B).transpose(0, 2, 1, 3)
+    return blocks[spec.brow, spec.bcol]
+
+
 def cb_tiles_init(key: jax.Array, spec: CBLinearSpec, dtype=jnp.float32,
                   scale: float | None = None) -> dict:
     """Draw tile values for an existing spec (vmap/scan friendly)."""

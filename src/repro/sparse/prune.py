@@ -6,6 +6,15 @@ weight is exactly the block-sparse structure the CB kernels consume (the
 block-pruning recipe (movement/magnitude pruning at block granularity) and
 is how the paper's SpMV technique becomes a *training/serving feature*
 rather than a standalone kernel demo.
+
+The refreeze machinery at the bottom makes the pattern *periodically*
+dynamic: every k training steps the block mask is recomputed from the
+current tile magnitudes (``refreeze_spec``). The crucial contract is that
+a mask-stable refreeze returns the SAME spec object — the custom-VJP
+matmul cache in ``linear.py`` keys on spec identity, so the jitted
+forward/backward closures (and any autotune plan attached to the layer)
+survive every step on which the structure did not actually drift. Only a
+genuine mask change pays for a spec rebuild.
 """
 from __future__ import annotations
 
@@ -51,3 +60,102 @@ def block_magnitude_prune(
     mb, nb = mask.shape
     full = np.repeat(np.repeat(mask, B, axis=0), B, axis=1)[:m, :n]
     return w * full, mask
+
+
+# ---------------------------------------------------------------------------
+# Mask refreeze: periodically re-derive the block pattern during training.
+# ---------------------------------------------------------------------------
+
+def refreeze_due(step: int, every_k: int) -> bool:
+    """Whether a mask refreeze fires on this (0-based) training step."""
+    return every_k > 0 and step > 0 and step % every_k == 0
+
+
+def refreeze_spec(params, spec, *, keep_fraction: float | None = None):
+    """Recompute the block mask from current magnitudes; rebuild only on drift.
+
+    Returns ``(params, spec, changed)``. When the freshly pruned mask
+    equals the spec's mask, the ORIGINAL ``params`` and ``spec`` objects
+    come back untouched (``changed=False``) — spec identity is what the
+    matmul cache keys on, so the layer's jitted VJP closures and plan
+    survive. On drift, a new spec is built through the same
+    ``spec_from_mask`` constructor as ``cb_linear_init`` and the
+    surviving tile values are carried over (newly admitted blocks start
+    at zero and regrow).
+    """
+    import jax.numpy as jnp
+
+    from . import linear as _linear  # lazy: linear imports prune at load
+
+    kf = spec.keep_fraction if keep_fraction is None else keep_fraction
+    a = np.asarray(_linear.dense_equivalent(params, spec)).T  # (out, in)
+    new_mask = block_sparsity_pattern(a, spec.block_size, kf)
+    if np.array_equal(new_mask, _linear.spec_block_mask(spec)):
+        return params, spec, False
+    new_spec = _linear.spec_from_mask(
+        new_mask, spec.in_features, spec.out_features,
+        block_size=spec.block_size, keep_fraction=kf,
+    )
+    new_params = dict(params)
+    new_params["tiles"] = jnp.asarray(
+        _linear.gather_tiles(a, new_spec), params["tiles"].dtype
+    )
+    return new_params, new_spec, True
+
+
+def refreeze_training_step(
+    params,
+    ef,
+    spec,
+    x,
+    y,
+    *,
+    step: int,
+    every_k: int,
+    lr: float = 1e-2,
+    keep_fraction: float | None = None,
+    impl: str = "reference",
+    interpret: bool | None = None,
+    group_size: int | None = None,
+    plan=None,
+):
+    """One EF-int8-compressed SGD step with mask refreeze every ``every_k``.
+
+    The dynamic-sparsity training hook: gradients ride the int8
+    error-feedback wire format (``training.grad_compression``), the
+    weight update is plain SGD on the tile stream, and on refreeze steps
+    the mask is re-derived from the updated magnitudes. Mask-stable steps
+    keep the exact same spec (and therefore the same compiled VJP and
+    plan); a drifted mask rebuilds the spec and resets the EF buffers to
+    match the new tile shapes.
+
+    Returns ``(params, ef, spec, loss, changed)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.training import grad_compression as _gc
+
+    from . import linear as _linear
+
+    def loss_fn(p):
+        pred = _linear.cb_linear_apply(
+            p, spec, x, impl=impl, interpret=interpret,
+            group_size=group_size, plan=plan,
+        )
+        return jnp.mean((pred.astype(jnp.float32)
+                         - y.astype(jnp.float32)) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    grads, ef = _gc.ef_compress_grads(grads, ef)
+    params = jax.tree_util.tree_map(
+        lambda p, g: (p - lr * g.astype(p.dtype)), params, grads
+    )
+    changed = False
+    if refreeze_due(step, every_k):
+        params, spec, changed = refreeze_spec(
+            params, spec, keep_fraction=keep_fraction
+        )
+        if changed:
+            ef = _gc.init_ef_buffers(params)
+    return params, ef, spec, loss, changed

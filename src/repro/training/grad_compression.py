@@ -68,6 +68,29 @@ def compressed_cross_pod_sum(grads, ef_buffers, axis_name: str = "pod"):
     return summed, new_ef
 
 
+def ef_compress_grads(grads, ef_buffers):
+    """Single-process EF-int8 round trip: the wire format without the psum.
+
+    Used by the sparse mask-refreeze training hook
+    (``sparse.prune.refreeze_training_step``): tile gradients pass through
+    the same int8 quantize/dequantize as the cross-pod path, with the
+    error-feedback buffers absorbing the rounding error so compressed SGD
+    stays convergent. Returns ``(decompressed_grads, new_ef_buffers)``.
+    """
+
+    def one(g, e):
+        q, scale, new_ef = ef_quantize(g, e)
+        return dequantize_int8(q, scale).astype(g.dtype), new_ef
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_buffers)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        jax.tree_util.tree_unflatten(tree, [o[0] for o in out]),
+        jax.tree_util.tree_unflatten(tree, [o[1] for o in out]),
+    )
+
+
 def init_ef_buffers(params):
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params

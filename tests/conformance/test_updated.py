@@ -1,0 +1,176 @@
+"""Conformance for the dynamic-sparsity value-update path.
+
+Contract, per (scenario, group_size) cell: an in-place value rewrite of a
+built CB matrix — ``CBMatrix.update_values`` on the packed payload, and
+the recorded stream updaters (``super_stream_updater`` and friends) on
+the super-block / super-tile streams — is BIT-identical to throwing the
+matrix away and rebuilding it from COO with the new values under the
+same configuration. Structure is untouched by construction, so every
+byte that is not a value payload must be byte-equal, and every value
+payload must land exactly where a fresh build would put it. The sweep
+covers colagg modes, forced intra-block formats, non-power-of-two block
+sizes and every batched group size.
+
+The property layer checks the other half of the contract: a value
+rewrite never changes stream *shapes* or padded work — the whole point
+of the fast path is that the Alg. 2 balance and packing decisions are
+frozen with the structure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from proptest import forall, integers, sampled_from
+
+from repro.core import CBMatrix
+from repro.core.streams import (
+    build_super_streams,
+    build_transposed_super_streams,
+    super_stream_updater,
+    super_tile_stream_from_cb,
+    super_tile_updater,
+    transposed_super_stream_updater,
+)
+from repro.kernels import ops
+
+from .scenarios import GROUP_SIZES, STRUCTURES, Scenario, batched_ids
+
+pytestmark = pytest.mark.conformance
+
+
+def updated_scenarios() -> list[tuple[Scenario, int]]:
+    """The update axis: structures x formats x colagg x group sizes."""
+    grid: list[tuple[Scenario, int]] = []
+    for G in GROUP_SIZES:
+        for structure in STRUCTURES:
+            grid.append((Scenario(structure, 16, "auto"), G))
+        for fmt in ("coo", "csr", "dense"):
+            for colagg in (True, False):
+                grid.append(
+                    (Scenario("uniform", 16, colagg, forced_fmt=fmt), G)
+                )
+        grid.append((Scenario("power_law", 24, "auto"), G))
+        grid.append((Scenario("bucket_widths", 8, True), G))
+    return grid
+
+
+UPDATED = updated_scenarios()
+
+
+def _fresh_values(cb: CBMatrix, seed: int) -> np.ndarray:
+    """New canonical values, bounded away from zero (exact zeros are
+    structure drift — outside the fast path's bit-identity contract)."""
+    rng = np.random.default_rng(seed)
+    count = cb.value_layout().count
+    mag = rng.uniform(0.5, 2.0, count)
+    sign = np.where(rng.random(count) < 0.5, -1.0, 1.0)
+    return (mag * sign).astype(cb.val_dtype)
+
+
+def _rebuild(cb: CBMatrix, scn: Scenario, new_vals: np.ndarray) -> CBMatrix:
+    rows, cols, _ = cb.to_coo()
+    return CBMatrix.from_coo(
+        rows, cols, new_vals, cb.shape,
+        block_size=scn.block_size,
+        val_dtype=np.dtype(scn.dtype),
+        thresholds=scn.thresholds(),
+        use_column_aggregation=scn.colagg,
+    )
+
+
+def _tree_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+@pytest.mark.parametrize("scn,G", UPDATED, ids=batched_ids(UPDATED))
+def test_update_bit_identical_to_fresh_build(scn, G):
+    cb = scn.build()
+    new_vals = _fresh_values(cb, seed=hash((scn.name, G)) % 2**31)
+    cb_up = cb.update_values(new_vals)
+    cb_fresh = _rebuild(cb, scn, new_vals)
+
+    # packed payload + every metadata array byte-equal
+    assert np.array_equal(cb_up.packed, cb_fresh.packed)
+    assert np.array_equal(cb_up.nnz_per_blk, cb_fresh.nnz_per_blk)
+    assert np.array_equal(cb_up.vp_per_blk, cb_fresh.vp_per_blk)
+    assert np.array_equal(cb_up.type_per_blk, cb_fresh.type_per_blk)
+
+    # updater-rewritten streams == streams of the fresh build
+    upd = super_stream_updater(cb, group_size=G)
+    assert _tree_equal(upd.apply(new_vals),
+                       build_super_streams(cb_fresh, group_size=G))
+
+    tupd = super_tile_updater(cb, group_size=G)
+    assert _tree_equal(tupd.apply(new_vals),
+                       super_tile_stream_from_cb(cb_fresh, group_size=G))
+
+
+@pytest.mark.parametrize(
+    "scn,G",
+    [(Scenario("power_law", 16, "auto"), 4),
+     (Scenario("uniform", 16, True, forced_fmt="coo"), 4),
+     (Scenario("banded", 8, "auto"), 1)],
+    ids=["power_law-B16-G4", "force_coo-B16-G4", "banded-B8-G1"],
+)
+def test_updated_spmv_spmm_execute_identically(scn, G):
+    """The rewritten streams also *execute* bit-identically (reference)."""
+    cb = scn.build()
+    new_vals = _fresh_values(cb, seed=7)
+    cb_fresh = _rebuild(cb, scn, new_vals)
+
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal(cb.shape[1]), jnp.float32
+    )
+    X = jnp.asarray(
+        np.random.default_rng(2).standard_normal((cb.shape[1], 8)),
+        jnp.float32,
+    )
+    s_up = super_stream_updater(cb, group_size=G).apply(new_vals)
+    s_fresh = build_super_streams(cb_fresh, group_size=G)
+    np.testing.assert_array_equal(
+        np.asarray(ops.cb_spmv(s_up, x, impl="reference")),
+        np.asarray(ops.cb_spmv(s_fresh, x, impl="reference")),
+    )
+    t_up = super_tile_updater(cb, group_size=G).apply(new_vals)
+    t_fresh = super_tile_stream_from_cb(cb_fresh, group_size=G)
+    np.testing.assert_array_equal(
+        np.asarray(ops.cb_spmm(t_up, X, impl="reference")),
+        np.asarray(ops.cb_spmm(t_fresh, X, impl="reference")),
+    )
+    # transposed stream: forward-canonical values, transposed structure
+    st_up = transposed_super_stream_updater(cb, group_size=G).apply(new_vals)
+    st_fresh = build_transposed_super_streams(cb_fresh, group_size=G)
+    y = jnp.asarray(
+        np.random.default_rng(3).standard_normal(cb.shape[0]), jnp.float32
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ops.cb_spmv(st_up, y, impl="reference")),
+        np.asarray(ops.cb_spmv(st_fresh, y, impl="reference")),
+    )
+
+
+@forall(integers(0, 2**31 - 1), sampled_from([8, 16, 24]),
+        sampled_from(list(STRUCTURES)), examples=12, seed=5)
+def test_value_rewrite_never_changes_shapes_or_padded_work(seed, B, structure):
+    """Property: updates rewrite payload bytes only — stream geometry,
+    padded work and step counts are invariant under any value rewrite."""
+    scn = Scenario(structure, B, "auto", seed=seed % 7)
+    cb = scn.build()
+    cb_up = cb.update_values(_fresh_values(cb, seed))
+
+    s0 = build_super_streams(cb)
+    s1 = build_super_streams(cb_up)
+    assert s0.padded_work() == s1.padded_work()
+    l0 = jax.tree_util.tree_leaves(s0)
+    l1 = jax.tree_util.tree_leaves(s1)
+    assert [np.shape(a) for a in l0] == [np.shape(a) for a in l1]
+
+    t0 = super_tile_stream_from_cb(cb)
+    t1 = super_tile_stream_from_cb(cb_up)
+    assert t0.padded_work() == t1.padded_work()
+    assert [np.shape(a) for a in jax.tree_util.tree_leaves(t0)] == \
+           [np.shape(a) for a in jax.tree_util.tree_leaves(t1)]

@@ -100,7 +100,7 @@ def test_resolve_errors_name_the_offending_constraint():
 
 def _mini_plan(**overrides):
     kw = dict(
-        matrix_hash="0" * 64, shape=(16, 16), nnz=4, val_dtype="float32",
+        structure_hash="0" * 64, shape=(16, 16), nnz=4, val_dtype="float32",
         block_size=16, th0=0.15, th1=4, th2=32, colagg=False, group_size=4,
         mode="heuristic", predicted_padded_elems=100, predicted_steps=2,
         measured_padded_elems=90, measured_steps=2,
@@ -237,10 +237,11 @@ def test_plan_save_load_roundtrip(tmp_path):
     assert Plan.load(path) == plan
     # schema rejection
     d = plan.to_json()
+    assert d["schema"] == "cb-plan/v2"
     d["schema"] = "cb-plan/v0"
     bad = tmp_path / "bad.json"
     bad.write_text(json.dumps(d))
-    with pytest.raises(ValueError, match="cb-plan/v1"):
+    with pytest.raises(ValueError, match="neither"):
         Plan.load(bad)
 
 
@@ -268,10 +269,10 @@ def test_content_hash_canonicalization():
 
 def test_plan_cache_miss_put_hit_and_corruption(tmp_path):
     cache = PlanCache(tmp_path / "plans")
-    plan = _mini_plan(matrix_hash="a" * 64)
-    assert cache.get(plan.matrix_hash) is None
+    plan = _mini_plan(structure_hash="a" * 64)
+    assert cache.get(plan.structure_hash) is None
     cache.put(plan)
-    assert cache.get(plan.matrix_hash) == plan
+    assert cache.get(plan.structure_hash) == plan
     assert (cache.hits, cache.misses) == (1, 1)
     assert cache.hit_rate == 0.5
 
@@ -281,9 +282,133 @@ def test_plan_cache_miss_put_hit_and_corruption(tmp_path):
     assert cache.get("b" * 64) is None
 
     # hash mismatch inside the file = miss (stale/renamed entry)
-    other = _mini_plan(matrix_hash="c" * 64)
+    other = _mini_plan(structure_hash="c" * 64)
     other.save(cache.path_for("d" * 64))
     assert cache.get("d" * 64) is None
+    assert (cache.hits, cache.misses, cache.stale) == (1, 3, 0)
+
+
+def test_plan_cache_stale_validation(tmp_path):
+    """A plan that loads but fails check_valid is a counted stale miss."""
+    cache = PlanCache(tmp_path / "plans")
+    plan = _mini_plan(structure_hash="a" * 64, shape=(16, 16), nnz=4)
+    cache.put(plan)
+    # wrong shape -> stale miss, not a crash and not a hit
+    assert cache.get("a" * 64, shape=(32, 32)) is None
+    assert (cache.hits, cache.misses, cache.stale) == (0, 1, 1)
+    # wrong nnz -> stale miss
+    assert cache.get("a" * 64, shape=(16, 16), nnz=99) is None
+    assert (cache.hits, cache.misses, cache.stale) == (0, 2, 2)
+    # matching matrix -> clean hit
+    assert cache.get("a" * 64, shape=(16, 16), nnz=4) == plan
+    assert (cache.hits, cache.misses, cache.stale) == (1, 2, 2)
+
+
+def test_plan_check_valid_reasons():
+    assert _mini_plan().check_valid() is None
+    assert "shape" in _mini_plan(shape=(0, 4)).check_valid()
+    assert "block_size" in _mini_plan(block_size=0).check_valid()
+    assert "group_size" in _mini_plan(group_size=0).check_valid()
+    # thresholds that cannot resolve at the plan's block size
+    assert "thresholds" in _mini_plan(th1=100, th2=50).check_valid()
+    r = _mini_plan().check_valid(shape=(99, 99))
+    assert "plan was made for shape" in r
+    assert _mini_plan().check_valid(shape=(16, 16), nnz=4) is None
+
+
+def test_plan_cache_v1_migration_single_hit(tmp_path):
+    """A v1 plan file read through the legacy probe = exactly one hit,
+    and the entry is re-keyed under the structure hash (v2 schema)."""
+    from repro.autotune import PLAN_SCHEMA_V1
+
+    cache = PlanCache(tmp_path / "plans")
+    legacy_key = "e" * 64
+    struct_key = "f" * 64
+    # fabricate the file a v1 process would have written
+    v1 = _mini_plan(structure_hash=legacy_key)
+    d = v1.to_json()
+    d["schema"] = PLAN_SCHEMA_V1
+    d["matrix_hash"] = d.pop("structure_hash")
+    d.pop("value_hash")
+    with open(cache.path_for(legacy_key), "w") as f:
+        json.dump(d, f)
+
+    got = cache.get(struct_key, legacy_hash=legacy_key,
+                    shape=(16, 16), nnz=4)
+    assert got is not None
+    assert got.structure_hash == struct_key
+    assert got.value_hash is None
+    assert (cache.hits, cache.misses, cache.stale) == (1, 0, 0)
+
+    # migration persisted: the v2 probe now hits directly
+    with open(cache.path_for(struct_key)) as f:
+        assert json.load(f)["schema"] == "cb-plan/v2"
+    assert cache.get(struct_key, shape=(16, 16), nnz=4) == got
+    assert (cache.hits, cache.misses) == (2, 0)
+
+
+def test_structure_hash_ignores_values_and_dtype():
+    from repro.autotune import matrix_hashes, structure_hash, value_hash
+
+    r = np.array([3, 1, 2])
+    c = np.array([0, 1, 2])
+    v = np.array([1.0, 2.0, 3.0], np.float32)
+    h = matrix_hashes(r, c, v, (4, 4))
+    assert h.nnz == 3
+    v2 = v.copy(); v2[0] = 9.0
+    h2 = matrix_hashes(r, c, v2, (4, 4))
+    assert h2.structure == h.structure      # pattern unchanged
+    assert h2.value != h.value              # values changed
+    # dtype rides the value hash only
+    h3 = matrix_hashes(r, c, v, (4, 4), val_dtype=np.float64)
+    assert h3.structure == h.structure
+    assert h3.value != h.value
+    # shape is structural
+    assert matrix_hashes(r, c, v, (4, 5)).structure != h.structure
+    # thin wrappers agree
+    assert structure_hash(r, c, v, (4, 4)) == h.structure
+    assert value_hash(r, c, v, (4, 4)) == h.value
+
+
+def test_hash_explicit_zero_and_duplicate_aliasing():
+    """Original triplets (explicit zeros, split duplicates) and their CB
+    round trip hash identically — the v1 aliasing defect."""
+    from repro.autotune import matrix_hashes
+
+    rows = np.array([0, 0, 2, 5, 5])
+    cols = np.array([1, 3, 2, 4, 4])
+    vals = np.array([1.0, 0.0, 3.0, 2.0, 2.5], np.float32)  # dup + zero
+    cb = CBMatrix.from_coo(rows, cols, vals, (8, 8), block_size=8,
+                           val_dtype=np.float32)
+    r2, c2, v2 = cb.to_coo()
+    assert len(r2) < len(rows)  # the round trip really canonicalized
+    h_orig = matrix_hashes(rows, cols, vals, (8, 8))
+    h_rt = matrix_hashes(r2, c2, v2, (8, 8))
+    assert h_orig == h_rt
+
+
+def test_plan_cache_aliasing_regression(tmp_path):
+    """plan_search on original vs round-tripped triplets shares ONE cache
+    entry: second lookup is a hit, and only one plan file exists."""
+    import os
+
+    rows = np.array([0, 0, 2, 5, 5, 9])
+    cols = np.array([1, 3, 2, 4, 4, 9])
+    vals = np.array([1.0, 0.0, 3.0, 2.0, 2.5, -1.0], np.float32)
+    shape = (16, 16)
+    cb = CBMatrix.from_coo(rows, cols, vals, shape, block_size=16,
+                           val_dtype=np.float32)
+    r2, c2, v2 = cb.to_coo()
+
+    cache = PlanCache(tmp_path / "plans")
+    p1 = plan_search(rows, cols, vals, shape, cache=cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = plan_search(r2, c2, v2, shape, cache=cache)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert p1 == p2
+    files = [f for f in os.listdir(cache.directory)
+             if f.endswith(".plan.json")]
+    assert len(files) == 1
 
 
 # ---------------------------------------------------------------------------

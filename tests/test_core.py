@@ -241,3 +241,64 @@ def test_storage_accounting_matches_paper_model():
     bsr = 256 * 8 * nblk + (512 // 16 + 1) * 4 + nblk * 4
     assert sizes["total"] < bsr / 4
     assert sizes["total"] < 4 * csr
+
+
+# ---------------------------------------------------------------------------
+# value layout + in-place value updates (dynamic sparsity)
+# ---------------------------------------------------------------------------
+
+@forall(coo_matrices(), sampled_from([8, 16]), examples=30)
+def test_update_values_bit_identical_to_fresh_build(mat, B):
+    rows, cols, vals, shape = mat
+    cb = CBMatrix.from_coo(rows, cols, vals, shape, block_size=B,
+                           val_dtype=np.float32)
+    layout = cb.value_layout()
+    r, c, _ = cb.to_coo()
+    assert layout.count == len(r)
+    rng = np.random.default_rng(layout.count)
+    new_vals = rng.uniform(0.5, 2.0, layout.count).astype(np.float32)
+    cb_up = cb.update_values(new_vals)
+    cb_fresh = CBMatrix.from_coo(r, c, new_vals, shape, block_size=B,
+                                 val_dtype=np.float32)
+    np.testing.assert_array_equal(cb_up.packed, cb_fresh.packed)
+    _, _, v_up = cb_up.to_coo()
+    np.testing.assert_array_equal(v_up, new_vals)
+
+
+def test_update_values_validates_length():
+    cb = CBMatrix.from_coo(np.array([0, 5]), np.array([1, 3]),
+                           np.array([1.0, 2.0], np.float32), (8, 8),
+                           block_size=8, val_dtype=np.float32)
+    with pytest.raises(ValueError, match="canonical"):
+        cb.update_values(np.ones(3, np.float32))
+
+
+def test_update_from_coo_dedups_and_rejects_drift():
+    rows = np.array([0, 0, 2, 5])
+    cols = np.array([1, 1, 2, 4])
+    vals = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+    cb = CBMatrix.from_coo(rows, cols, vals, (8, 8), block_size=8,
+                           val_dtype=np.float32)
+    # same coords (duplicates split differently) -> accepted, summed
+    cb2 = cb.update_from_coo(rows, cols,
+                             np.array([5.0, 5.0, 6.0, 7.0], np.float32))
+    _, _, v = cb2.to_coo()
+    np.testing.assert_array_equal(np.sort(v), [6.0, 7.0, 10.0])
+    # a new coordinate is structure drift
+    with pytest.raises(ValueError, match="structure drift"):
+        cb.update_from_coo(np.array([0, 2, 5, 7]), cols, vals)
+
+
+def test_value_layout_keys_are_canonical_order():
+    rng = np.random.default_rng(3)
+    rows = rng.integers(0, 40, 120)
+    cols = rng.integers(0, 48, 120)
+    vals = rng.standard_normal(120).astype(np.float32)
+    for colagg in (True, False):
+        cb = CBMatrix.from_coo(rows, cols, vals, (40, 48), block_size=16,
+                               val_dtype=np.float32,
+                               use_column_aggregation=colagg)
+        layout = cb.value_layout()
+        r, c, _ = cb.to_coo()
+        np.testing.assert_array_equal(layout.keys, r * 48 + c)
+        assert np.all(np.diff(layout.keys) > 0)

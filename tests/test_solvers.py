@@ -301,3 +301,140 @@ def test_pagerank_power_law_matches_numpy():
             break
         x = xn
     np.testing.assert_allclose(p, x, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic sparsity: with_values / DiagScatter / EvolvingPageRank
+# ---------------------------------------------------------------------------
+
+def _updatable_case(seed=0, m=70, n=70, group_size=4):
+    rng = np.random.default_rng(seed)
+    rows = np.concatenate([rng.integers(0, m, 500), np.arange(m)])
+    cols = np.concatenate([rng.integers(0, n, 500), np.arange(m)])
+    vals = np.concatenate([rng.standard_normal(500),
+                           np.full(m, 3.0)]).astype(np.float32)
+    cb = CBMatrix.from_coo(rows, cols, vals, (m, n), block_size=16,
+                           val_dtype=np.float32)
+    op = CBLinearOperator.from_cb(cb, group_size=group_size,
+                                  with_rmatvec=True, with_matmat=True,
+                                  updatable=True)
+    return cb, op, rng
+
+
+def _nonzero_values(cb, rng):
+    v = rng.standard_normal(cb.value_layout().count).astype(np.float32)
+    v[v == 0] = 1.0
+    return v
+
+
+def test_with_values_bit_identical_to_rebuild():
+    cb, op, rng = _updatable_case(seed=7)
+    new_vals = _nonzero_values(cb, rng)
+    op_new = op.with_values(new_vals)
+    op_ref = CBLinearOperator.from_cb(cb.update_values(new_vals),
+                                      group_size=4, with_rmatvec=True,
+                                      with_matmat=True)
+    x = jnp.asarray(rng.standard_normal(cb.shape[1]), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(cb.shape[0]), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((cb.shape[1], 5)), jnp.float32)
+    for got, want in [
+        (op_new.matvec(x, impl="reference"),
+         op_ref.matvec(x, impl="reference")),
+        (op_new.rmatvec(y, impl="reference"),
+         op_ref.rmatvec(y, impl="reference")),
+        (op_new.matmat(X, impl="reference"),
+         op_ref.matmat(X, impl="reference")),
+    ]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # static metadata shared object-for-object (the no-retrace contract)
+    assert op_new.updater is op.updater
+    assert op_new.updater_T is op.updater_T
+    assert op_new.tile_updater is op.tile_updater
+
+
+def test_with_values_requires_updatable():
+    cb, _, rng = _updatable_case(seed=8)
+    op = CBLinearOperator.from_cb(cb)
+    with pytest.raises(ValueError, match="updatable=True"):
+        op.with_values(_nonzero_values(cb, rng))
+
+
+def test_with_values_single_trace_across_updates():
+    cb, op, rng = _updatable_case(seed=9)
+    traces = []
+
+    @jax.jit
+    def apply(op, x):
+        traces.append(1)
+        return op.matvec(x, impl="reference")
+
+    x = jnp.asarray(rng.standard_normal(cb.shape[1]), jnp.float32)
+    y0 = np.asarray(apply(op, x))
+    for _ in range(3):
+        op2 = op.with_values(_nonzero_values(cb, rng))
+        y2 = np.asarray(apply(op2, x))
+        assert not np.array_equal(y2, y0)  # values really changed
+    assert len(traces) == 1  # value churn never retraced
+
+
+def test_diag_scatter_matches_rebuilt_preconditioners():
+    from repro.solvers import diag_scatter
+
+    cb, _, rng = _updatable_case(seed=10)
+    ds = diag_scatter(cb)
+    for _ in range(2):
+        new_vals = _nonzero_values(cb, rng)
+        cb_new = cb.update_values(new_vals)
+        np.testing.assert_array_equal(
+            np.asarray(ds.jacobi(new_vals).inv_diag),
+            np.asarray(jacobi(cb_new).inv_diag),
+        )
+        got = ds.block_jacobi(new_vals)
+        want = block_jacobi(cb_new)
+        np.testing.assert_array_equal(np.asarray(got.inv_blocks),
+                                      np.asarray(want.inv_blocks))
+        assert (got.m, got.block_size) == (want.m, want.block_size)
+
+
+def test_evolving_pagerank_matches_fresh_builds():
+    from repro.solvers import EvolvingPageRank
+
+    n = 64
+    rng = np.random.default_rng(21)
+    src = rng.integers(0, n, 400)
+    dst = rng.integers(0, n, 400)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    ev = EvolvingPageRank.build(src, dst, n, block_size=16)
+    for step in range(3):
+        w = rng.uniform(0.1, 2.0, len(src))
+        res = ev.step(w, impl="reference", maxiter=150)
+        # reference: full rebuild with the same weights
+        key = src.astype(np.int64) * n + dst.astype(np.int64)
+        uk, inv = np.unique(key, return_inverse=True)
+        s_u, d_u = uk // n, uk % n
+        w_u = np.zeros(len(uk)); np.add.at(w_u, inv, w)
+        outsum = np.zeros(n); np.add.at(outsum, s_u, w_u)
+        cb_f = CBMatrix.from_coo(d_u, s_u,
+                                 (w_u / outsum[s_u]).astype(np.float32),
+                                 (n, n), block_size=16)
+        op_f = CBLinearOperator.from_cb(cb_f)
+        res_f = pagerank(op_f,
+                         jnp.asarray(np.bincount(s_u, minlength=n) == 0,
+                                     jnp.float32),
+                         impl="reference", maxiter=150)
+        np.testing.assert_allclose(np.asarray(res.eigenvector),
+                                   np.asarray(res_f.eigenvector), atol=1e-6)
+
+
+def test_evolving_pagerank_rejects_structure_drift():
+    from repro.solvers import EvolvingPageRank
+
+    n = 32
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 0])
+    ev = EvolvingPageRank.build(src, dst, n, block_size=16)
+    with pytest.raises(ValueError, match="structure drift"):
+        ev.canonical_values(np.array([1.0, 0.0, 1.0, 1.0]))
+    with pytest.raises(ValueError, match="one weight per"):
+        ev.canonical_values(np.ones(3))
