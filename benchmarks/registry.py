@@ -107,6 +107,15 @@ SECTIONS: dict[str, Section] = {
         # the acceptance bar: payload rewrite at <= 1/4 of a full rebuild
         geomean_max=(("t_update", "t_rebuild", 0.25),),
     ),
+    "robustness": Section(
+        "Fault injection: typed detection + solver fallback recovery",
+        "benchmarks.robustness_bench",
+        required_keys=("matrix", "case", "ok", "rate"),
+        require_true=("ok",),
+        # the acceptance bar: every injected fault detected (or tolerated
+        # with a bit-correct result) and every seeded breakdown recovered
+        min_values=(("rate", 1.0),),
+    ),
 }
 
 

@@ -18,8 +18,11 @@ python -m pytest "${PYTEST_ARGS[@]}"
 echo "== benchmark smoke: fig34 (distribution + balance) =="
 python -m benchmarks.run --scale small --only fig34
 
-echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic (--json + regression guard) =="
+echo "== robustness: fault-injection axis (pytest -m robustness) =="
+python -m pytest -q -m robustness
+
+echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic + robustness (--json + regression guard) =="
 BENCH_JSON="$(mktemp /tmp/bench_spmv.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
-python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic --json "$BENCH_JSON"
+python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic,robustness --json "$BENCH_JSON"
 python scripts/bench_guard.py "$BENCH_JSON" benchmarks/BENCH_spmv.json

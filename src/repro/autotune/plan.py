@@ -42,6 +42,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro import errors
 from repro.core import aggregation
 from repro.core.formats import FormatThresholds
 
@@ -182,6 +183,11 @@ class Plan:
     measured_steps: int
     t_spmv: float | None = None     # refinement timing (None in heuristic mode)
     value_hash: str | None = None   # values the measurements ran with (info)
+    # sha256 over the canonical JSON payload, written by ``to_json`` and
+    # verified by ``check_valid`` (None = pre-checksum file, not checked).
+    # compare=False so a loaded plan still ``==`` the freshly-planned one.
+    payload_checksum: str | None = dataclasses.field(
+        default=None, compare=False)
 
     @property
     def thresholds(self) -> FormatThresholds:
@@ -198,6 +204,13 @@ class Plan:
         ``PlanCache.get`` treats a non-None reason as a stale miss;
         ``CBMatrix.from_plan`` raises it.
         """
+        if (self.payload_checksum is not None
+                and self.payload_checksum != self._payload_digest()):
+            return errors.reason(
+                errors.ARTIFACT_CORRUPT,
+                "plan payload checksum mismatch — the persisted fields "
+                "were altered after save",
+            )
         if len(self.shape) != 2 or min(self.shape) < 1:
             return f"plan shape {self.shape!r} is not a positive 2-D shape"
         if self.block_size < 1:
@@ -216,10 +229,25 @@ class Plan:
         return None
 
     # ------------------------------------------------------------------
+    def _payload_digest(self) -> str:
+        """sha256 over the canonical JSON form of every persisted field.
+
+        Canonical = compact separators, sorted keys, shape as a list,
+        ``payload_checksum`` itself excluded — so the digest a fresh
+        ``to_json`` stamps and the one a loaded plan recomputes agree
+        bit-for-bit (JSON round-trips Python ints/floats exactly).
+        """
+        d = dataclasses.asdict(self)
+        d.pop("payload_checksum", None)
+        d["shape"] = list(self.shape)
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["shape"] = list(self.shape)
         d["schema"] = PLAN_SCHEMA
+        d["payload_checksum"] = self._payload_digest()
         return d
 
     @classmethod
@@ -232,6 +260,7 @@ class Plan:
             d = dict(d)
             d["structure_hash"] = d.pop("matrix_hash")
             d.setdefault("value_hash", None)
+            d.setdefault("payload_checksum", None)
         elif schema != PLAN_SCHEMA:
             raise ValueError(
                 f"plan schema {schema!r} is neither {PLAN_SCHEMA!r} nor "
@@ -303,8 +332,11 @@ class PlanCache:
         if plan is None and legacy_hash and legacy_hash != structure_hash:
             legacy = self._load(legacy_hash)
             if legacy is not None:
+                # Re-keying changes the payload, so the stored digest (if
+                # any) no longer applies; ``put`` stamps a fresh one.
                 plan = dataclasses.replace(
-                    legacy, structure_hash=structure_hash
+                    legacy, structure_hash=structure_hash,
+                    payload_checksum=None,
                 )
                 migrated = True
         if plan is None:

@@ -16,10 +16,54 @@ format. Kernel-facing typed streams are derived by core/streams.py.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import zipfile
+import zlib
 
 import numpy as np
 
+from repro import errors
+
 from . import aggregation, balance, blocking, column_agg, formats
+
+
+def _nonfinite_policy(vals: np.ndarray, policy: str, where: str) -> np.ndarray:
+    """Apply the non-finite payload policy (``repro.errors`` taxonomy).
+
+    ``"raise"`` (the hardened default) rejects NaN/Inf with a typed
+    ``NonFiniteError``; ``"sanitize"`` maps them to 0.0; ``"allow"``
+    keeps them (the caller owns downstream NaN propagation — the solver
+    loops flag it as ``SolverStatus.NONFINITE``).
+    """
+    if policy == "allow" or not np.issubdtype(vals.dtype, np.inexact):
+        return vals
+    finite = np.isfinite(vals)
+    if finite.all():
+        return vals
+    if policy == "raise":
+        bad = int((~finite).sum())
+        raise errors.NonFiniteError(
+            f"{where}: {bad} non-finite value(s) in payload "
+            f"(pass nonfinite='sanitize' to zero them or 'allow' to keep)"
+        )
+    if policy == "sanitize":
+        return np.where(finite, vals, vals.dtype.type(0))
+    raise ValueError(
+        f"unknown nonfinite policy {policy!r}; "
+        "expected 'raise', 'sanitize' or 'allow'"
+    )
+
+
+def _npz_checksum(entries: dict) -> str:
+    """Deterministic sha256 over named arrays (key + dtype + shape + bytes)."""
+    h = hashlib.sha256()
+    for key in sorted(entries):
+        arr = np.asarray(entries[key])
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(np.asarray(arr.shape, np.int64).tobytes())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,12 +113,14 @@ class CBMatrix:
         thresholds: formats.FormatThresholds = formats.DEFAULT_THRESHOLDS,
         use_column_aggregation: bool | str = "auto",
         warps_per_tb: int = 8,
+        nonfinite: str = "raise",
     ) -> "CBMatrix":
         val_dtype = np.dtype(val_dtype)
         thresholds = formats.coerce_thresholds(thresholds)
         rows = np.asarray(rows)
         cols = np.asarray(cols)
         vals = np.asarray(vals, dtype=val_dtype)
+        vals = _nonfinite_policy(vals, nonfinite, "CBMatrix.from_coo")
 
         # (1)+(2): probe partition to decide column aggregation (th0 gate).
         probe = blocking.partition_coo(rows, cols, vals, shape, block_size)
@@ -190,7 +236,7 @@ class CBMatrix:
                       f"plan was made for shape {plan.shape}, "
                       f"got {tuple(shape)}")
         if reason is not None:
-            raise ValueError(reason)
+            raise errors.PlanStaleError(reason)
         return cls.from_coo(
             rows, cols, vals, shape,
             block_size=plan.block_size,
@@ -207,10 +253,16 @@ class CBMatrix:
     SAVE_SCHEMA = "cb-matrix/v1"
 
     def save(self, path) -> None:
-        """Serialize the full CB structure to a single ``.npz`` file."""
+        """Serialize the full CB structure to a single ``.npz`` file.
+
+        The payload is integrity-checked: a sha256 over every named
+        array (key, dtype, shape, bytes — deterministic order) rides
+        along as ``checksum`` and is re-verified by :meth:`load`, so a
+        truncated or byte-flipped artifact fails with a typed
+        ``errors.ArtifactError`` instead of mis-building silently.
+        """
         th = self.thresholds
-        np.savez(
-            path,
+        entries = dict(
             schema=np.asarray(self.SAVE_SCHEMA),
             shape=np.asarray(self.shape, np.int64),
             block_size=np.int64(self.block_size),
@@ -240,48 +292,182 @@ class CBMatrix:
             ),
             nnz=np.int64(self.nnz),
         )
+        entries["checksum"] = np.asarray(_npz_checksum(entries))
+        np.savez(path, **entries)
 
     @classmethod
-    def load(cls, path) -> "CBMatrix":
-        """Inverse of :meth:`save`; rejects unknown schema versions."""
-        with np.load(path, allow_pickle=False) as z:
-            schema = str(z["schema"])
-            if schema != cls.SAVE_SCHEMA:
-                raise ValueError(
-                    f"{path}: schema {schema!r} != {cls.SAVE_SCHEMA!r}"
+    def load(cls, path, *, validate: bool = True) -> "CBMatrix":
+        """Inverse of :meth:`save`; rejects unknown schemas and corruption.
+
+        Every failure mode is typed (``repro.errors``): an unreadable or
+        byte-damaged file (zip/zlib/truncation errors, checksum
+        mismatch) raises ``ArtifactError``; a wrong schema tag raises
+        ``SchemaError``; a payload that decodes but violates the CB
+        structural invariants fails :meth:`validate` (skippable via
+        ``validate=False`` for forensics on damaged artifacts).
+        Pre-checksum ``cb-matrix/v1`` files (no ``checksum`` entry)
+        still load.
+        """
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                entries = {k: np.asarray(z[k]) for k in z.files}
+        except (OSError, zipfile.BadZipFile, zlib.error, EOFError,
+                KeyError, ValueError, NotImplementedError) as e:
+            # NotImplementedError: zipfile raises it when a byte flip lands
+            # in the archive's version-needed field.
+            raise errors.ArtifactError(
+                f"{path}: unreadable cb-matrix artifact: {e}"
+            ) from e
+        schema = str(entries.get("schema"))
+        if schema != cls.SAVE_SCHEMA:
+            raise errors.SchemaError(
+                f"{path}: schema {schema!r} != {cls.SAVE_SCHEMA!r}"
+            )
+        stored = entries.pop("checksum", None)
+        if stored is not None:
+            digest = _npz_checksum(entries)
+            if str(stored) != digest:
+                raise errors.ArtifactError(
+                    f"{path}: checksum mismatch — artifact bytes are "
+                    f"corrupted (stored {str(stored)[:12]}..., "
+                    f"recomputed {digest[:12]}...)"
                 )
-            th0, th1, th2 = z["thresholds"]
-            return cls(
-                shape=tuple(int(v) for v in z["shape"]),
-                block_size=int(z["block_size"]),
-                val_dtype=np.dtype(str(z["val_dtype"])),
+        try:
+            th0, th1, th2 = entries["thresholds"]
+            cb = cls(
+                shape=tuple(int(v) for v in entries["shape"]),
+                block_size=int(entries["block_size"]),
+                val_dtype=np.dtype(str(entries["val_dtype"])),
                 thresholds=formats.FormatThresholds(
                     th0=float(th0),
                     th1=None if th1 < 0 else int(th1),
                     th2=None if th2 < 0 else int(th2),
                 ),
-                blk_row_idx=z["blk_row_idx"],
-                blk_col_idx=z["blk_col_idx"],
-                nnz_per_blk=z["nnz_per_blk"],
-                type_per_blk=z["type_per_blk"],
-                vp_per_blk=z["vp_per_blk"],
-                packed=z["packed"],
+                blk_row_idx=entries["blk_row_idx"],
+                blk_col_idx=entries["blk_col_idx"],
+                nnz_per_blk=entries["nnz_per_blk"],
+                type_per_blk=entries["type_per_blk"],
+                vp_per_blk=entries["vp_per_blk"],
+                packed=entries["packed"],
                 colagg=column_agg.ColumnAggregation(
-                    applied=bool(z["colagg_applied"]),
-                    new_cols=z["colagg_new_cols"],
-                    restore_cols=z["colagg_restore_cols"],
-                    cols_offset=z["colagg_cols_offset"],
-                    panel_width=z["colagg_panel_width"],
-                    num_panels=len(z["colagg_panel_width"]),
+                    applied=bool(entries["colagg_applied"]),
+                    new_cols=entries["colagg_new_cols"],
+                    restore_cols=entries["colagg_restore_cols"],
+                    cols_offset=entries["colagg_cols_offset"],
+                    panel_width=entries["colagg_panel_width"],
+                    num_panels=len(entries["colagg_panel_width"]),
                 ),
                 balance_result=balance.BalanceResult(
-                    slots=z["bal_slots"],
-                    group_loads=z["bal_group_loads"],
-                    num_groups=int(z["bal_geom"][0]),
-                    group_size=int(z["bal_geom"][1]),
+                    slots=entries["bal_slots"],
+                    group_loads=entries["bal_group_loads"],
+                    num_groups=int(entries["bal_geom"][0]),
+                    group_size=int(entries["bal_geom"][1]),
                 ),
-                nnz=int(z["nnz"]),
+                nnz=int(entries["nnz"]),
             )
+        except (KeyError, TypeError, ValueError) as e:
+            raise errors.ArtifactError(
+                f"{path}: cb-matrix payload is incomplete or malformed: {e}"
+            ) from e
+        return cb.validate() if validate else cb
+
+    # ------------------------------------------------------------------
+    def validate(self, *, check_finite: bool = False) -> "CBMatrix":
+        """Assert the CB structural invariants; raise ``ArtifactError``.
+
+        Vectorized checks over the balanced-slot metadata and the packed
+        buffer: consistent stream shapes, in-bounds block indices
+        (colagg-aware), legal format codes, per-format payload byte
+        spans inside ``packed``, pad-slot conventions, and the nnz
+        ledger. ``check_finite=True`` additionally decodes every stored
+        value (via :meth:`value_layout`) and applies the non-finite
+        detection — opt-in because it walks the blocks.
+
+        Returns ``self`` so call sites can chain
+        (``CBMatrix.load(p).validate()`` is load's default behavior).
+        """
+        def bad(msg: str) -> errors.ArtifactError:
+            return errors.ArtifactError(f"CBMatrix.validate: {msg}")
+
+        m, n = (int(v) for v in self.shape)
+        B = int(self.block_size)
+        if m < 1 or n < 1 or B < 1:
+            raise bad(f"nonsense geometry shape={self.shape} B={B}")
+        meta = (self.blk_row_idx, self.blk_col_idx, self.nnz_per_blk,
+                self.type_per_blk, self.vp_per_blk)
+        nslots = len(self.blk_row_idx)
+        if any(a.ndim != 1 or len(a) != nslots for a in meta):
+            raise bad(
+                "metadata stream shapes disagree: "
+                f"{[a.shape for a in meta]}"
+            )
+        bal = self.balance_result
+        if bal.num_groups * bal.group_size != nslots:
+            raise bad(
+                f"balance geometry {bal.num_groups}x{bal.group_size} "
+                f"!= {nslots} slots"
+            )
+        nnzb = self.nnz_per_blk.astype(np.int64)
+        if (nnzb < 0).any() or (nnzb > B * B).any():
+            raise bad(f"per-block nnz outside [0, {B * B}]")
+        if int(nnzb.sum()) != int(self.nnz):
+            raise bad(
+                f"nnz ledger mismatch: blocks sum to {int(nnzb.sum())}, "
+                f"matrix claims {self.nnz}"
+            )
+        real = nnzb > 0
+        if (self.vp_per_blk[~real] != 0).any():
+            raise bad("pad slot with a nonzero value pointer")
+        if real.any():
+            brow = self.blk_row_idx[real].astype(np.int64)
+            bcol = self.blk_col_idx[real].astype(np.int64)
+            fmt = self.type_per_blk[real].astype(np.int64)
+            vp = self.vp_per_blk[real].astype(np.int64)
+            cnt = nnzb[real]
+            if (brow < 0).any() or (brow * B >= m).any():
+                raise bad(f"block-row index outside [0, {-(-m // B)})")
+            if self.colagg.applied:
+                width = self.colagg.panel_width[brow]
+            else:
+                width = np.full(len(brow), n, np.int64)
+            if (bcol < 0).any() or (bcol * B >= width).any():
+                raise bad("block-col index outside its panel's width")
+            known = np.isin(
+                fmt, [formats.FMT_COO, formats.FMT_CSR, formats.FMT_DENSE]
+            )
+            if not known.all():
+                raise bad(
+                    f"unknown format code(s) {np.unique(fmt[~known])}"
+                )
+            vsize = self.val_dtype.itemsize
+            cdt_size = aggregation.coord_dtype(B).itemsize
+            rp_size = (B + 1) * aggregation._csr_rowptr_dtype(B).itemsize
+            head = np.where(
+                fmt == formats.FMT_DENSE, 0,
+                np.where(fmt == formats.FMT_COO, cnt * cdt_size,
+                         rp_size + cnt * cdt_size))
+            body = np.where(fmt == formats.FMT_DENSE, B * B * vsize,
+                            cnt * vsize)
+            need = head + (-head) % vsize + body
+            if (vp < 0).any() or (vp + need > len(self.packed)).any():
+                raise bad(
+                    "value pointer + payload span exceeds the packed "
+                    f"buffer ({len(self.packed)} bytes)"
+                )
+        if check_finite:
+            layout = self.value_layout()
+            if layout.count:
+                vsize = self.val_dtype.itemsize
+                idx = (layout.byte_pos[:, None]
+                       + np.arange(vsize, dtype=np.int64))
+                vals = self.packed[idx].reshape(-1).view(self.val_dtype)
+                if not np.isfinite(vals).all():
+                    raise errors.NonFiniteError(
+                        "CBMatrix.validate: packed payload contains "
+                        f"{int((~np.isfinite(vals)).sum())} non-finite "
+                        "value(s)"
+                    )
+        return self
 
     # ------------------------------------------------------------------
     @property
@@ -407,7 +593,8 @@ class CBMatrix:
         self._value_layout_cache = layout
         return layout
 
-    def update_values(self, new_vals: np.ndarray) -> "CBMatrix":
+    def update_values(self, new_vals: np.ndarray, *,
+                      nonfinite: str = "raise") -> "CBMatrix":
         """Rewrite the packed values in place of a full rebuild.
 
         ``new_vals`` is one value per element in **canonical order** —
@@ -425,6 +612,7 @@ class CBMatrix:
         """
         layout = self.value_layout()
         vals = np.ascontiguousarray(new_vals, self.val_dtype)
+        vals = _nonfinite_policy(vals, nonfinite, "CBMatrix.update_values")
         if vals.shape != (layout.count,):
             raise ValueError(
                 f"update_values expects {layout.count} canonical values "
@@ -445,6 +633,8 @@ class CBMatrix:
         rows: np.ndarray,
         cols: np.ndarray,
         vals: np.ndarray,
+        *,
+        nonfinite: str = "raise",
     ) -> "CBMatrix":
         """``update_values`` for triplets in arbitrary order.
 
@@ -464,12 +654,13 @@ class CBMatrix:
         summed = np.zeros(len(uniq), self.val_dtype)
         np.add.at(summed, inv, vals)
         if len(uniq) != layout.count or not np.array_equal(uniq, layout.keys):
-            raise ValueError(
+            raise errors.StructureDriftError(errors.reason(
+                errors.STRUCTURE_DRIFT,
                 "sparsity pattern differs from this CBMatrix's structure; "
                 "update_from_coo only rewrites values — rebuild with "
-                "from_coo (and re-plan) for structure drift"
-            )
-        return self.update_values(summed)
+                "from_coo (and re-plan) for structure drift",
+            ))
+        return self.update_values(summed, nonfinite=nonfinite)
 
     def global_x_index(self, brow: int, bcol: int, local_c: np.ndarray) -> np.ndarray:
         """Map (block, local col) -> original global column of x."""

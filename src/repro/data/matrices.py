@@ -12,6 +12,8 @@ import dataclasses
 
 import numpy as np
 
+from repro import errors
+
 
 @dataclasses.dataclass(frozen=True)
 class MatrixSpec:
@@ -186,48 +188,62 @@ def load_matrix_market(path):
     variants are expanded to the full element set (off-diagonal entries
     mirrored; negated for skew). Indices come back 0-based int64, values
     float64 — ready for ``CBMatrix.from_coo``. ``complex`` fields and
-    ``array`` (dense) format raise ``ValueError``.
+    ``array`` (dense) format raise ``errors.IngestError`` (a
+    ``ValueError``), as do truncated/malformed entry lines, absurd size
+    lines, and non-finite values. Duplicate coordinates are merged by
+    summation — the same canonicalization ``plan.canonical_triplets``
+    and ``CBMatrix.from_coo`` apply — so the triplets round-trip through
+    the plan cache's structure hash unchanged.
     """
+    def bad(msg):
+        return errors.IngestError(
+            errors.reason(errors.INGEST_INVALID, f"{path}: {msg}"))
+
     with open(path) as f:
         header = f.readline().split()
         if len(header) != 5 or header[0] != "%%MatrixMarket":
-            raise ValueError(f"{path}: not a MatrixMarket file")
+            raise bad("not a MatrixMarket file")
         obj, fmt, field, symmetry = (tok.lower() for tok in header[1:])
         if obj != "matrix" or fmt != "coordinate":
-            raise ValueError(
-                f"{path}: only 'matrix coordinate' supported, "
-                f"got '{obj} {fmt}'"
-            )
+            raise bad(f"only 'matrix coordinate' supported, got '{obj} {fmt}'")
         if field not in _MM_FIELDS:
-            raise ValueError(f"{path}: unsupported field '{field}'")
+            raise bad(f"unsupported field '{field}'")
         if symmetry not in _MM_SYMMETRIES:
-            raise ValueError(f"{path}: unsupported symmetry '{symmetry}'")
+            raise bad(f"unsupported symmetry '{symmetry}'")
         line = f.readline()
         while line and line.lstrip().startswith("%"):
             line = f.readline()
         dims = line.split()
         if len(dims) != 3:
-            raise ValueError(f"{path}: malformed size line {line!r}")
-        m, n, nnz = (int(t) for t in dims)
-        data = np.loadtxt(f, ndmin=2, dtype=np.float64)
+            raise bad(f"malformed size line {line!r}")
+        try:
+            m, n, nnz = (int(t) for t in dims)
+        except ValueError:
+            raise bad(f"malformed size line {line!r} (non-integer dims)")
+        if m < 1 or n < 1 or nnz < 0:
+            raise bad(f"malformed size line {line!r} (absurd dimensions)")
+        try:
+            data = np.loadtxt(f, ndmin=2, dtype=np.float64)
+        except ValueError as e:
+            raise bad(f"malformed entry line ({e})")
     if data.size == 0:
         data = np.zeros((0, 2 if field == "pattern" else 3))
     if len(data) != nnz:
-        raise ValueError(
-            f"{path}: header promises {nnz} entries, found {len(data)}"
-        )
+        raise bad(f"header promises {nnz} entries, found {len(data)}")
     rows = data[:, 0].astype(np.int64) - 1
     cols = data[:, 1].astype(np.int64) - 1
     if field == "pattern":
         vals = np.ones(len(rows), np.float64)
     else:
         if data.shape[1] < 3:
-            raise ValueError(f"{path}: '{field}' entries need a value column")
+            raise bad(f"'{field}' entries need a value column")
         vals = data[:, 2]
+    if not np.all(np.isfinite(vals)):
+        raise bad("non-finite value entries (NaN/Inf)")
     if rows.size and (
         rows.min() < 0 or rows.max() >= m or cols.min() < 0 or cols.max() >= n
     ):
-        raise ValueError(f"{path}: coordinate out of bounds for {m}x{n}")
+        raise bad(f"coordinate out of bounds for {m}x{n}")
     if symmetry != "general":
         off = rows != cols
         sign = -1.0 if symmetry == "skew-symmetric" else 1.0
@@ -236,6 +252,15 @@ def load_matrix_market(path):
             np.concatenate([cols, rows[off]]),
             np.concatenate([vals, sign * vals[off]]),
         )
+    key = rows * n + cols
+    uniq, inv = np.unique(key, return_inverse=True)
+    if len(uniq) != len(key):
+        # dedup-sum, preserving nothing but the canonical (row, col) order
+        # — only taken when duplicates actually exist, so duplicate-free
+        # files keep their on-disk entry order.
+        summed = np.zeros(len(uniq), vals.dtype)
+        np.add.at(summed, inv, vals)
+        rows, cols, vals = uniq // n, uniq % n, summed
     return rows, cols, vals, (m, n)
 
 

@@ -25,6 +25,8 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro import errors
+
 
 @dataclasses.dataclass
 class HostStatus:
@@ -99,13 +101,28 @@ class RestartDecision:
 
 
 class RestartPolicy:
-    """checkpoint/restart with deterministic replay (single source of truth)."""
+    """checkpoint/restart with deterministic replay (single source of truth).
 
-    def __init__(self, checkpointer, monitor: HeartbeatMonitor):
+    ``max_restarts`` bounds the budget: once that many ``on_failure``
+    decisions have been handed out, further failures raise
+    ``errors.RestartBudgetError`` — a crash-looping job must surface to
+    the operator rather than burn the fleet replaying forever.
+    """
+
+    def __init__(self, checkpointer, monitor: HeartbeatMonitor,
+                 *, max_restarts: int | None = None):
         self.checkpointer = checkpointer
         self.monitor = monitor
+        self.max_restarts = max_restarts
+        self.restarts = 0
 
     def on_failure(self) -> RestartDecision:
+        if self.max_restarts is not None and self.restarts >= self.max_restarts:
+            raise errors.RestartBudgetError(errors.reason(
+                errors.RESTART_BUDGET_EXHAUSTED,
+                f"restart budget of {self.max_restarts} exhausted",
+            ))
+        self.restarts += 1
         step = self.checkpointer.latest_step() or 0
         surviving = self.monitor.alive_hosts
         return RestartDecision(
@@ -114,3 +131,41 @@ class RestartPolicy:
             surviving_hosts=surviving,
             needs_remesh=len(surviving) < len(self.monitor.hosts),
         )
+
+
+def run_supervised(step_fn, init_state, *, num_steps: int,
+                   checkpointer, policy: RestartPolicy,
+                   checkpoint_every: int = 1, host_id: int = 0):
+    """Run ``num_steps`` of ``step_fn`` under checkpoint/restart supervision.
+
+    ``step_fn(state, step) -> state`` must be deterministic in its
+    arguments — that is the replay contract: after a failure the loop
+    restores the newest checkpoint and re-executes from its step, so the
+    final state is bit-identical to a fault-free run. The checkpoint at
+    step ``s`` holds the state *before* executing step ``s`` (step 0 is
+    persisted up front so even a first-step failure has a restore
+    point). Each successful step heartbeats ``policy.monitor``; each
+    failure consumes one unit of the policy's restart budget
+    (``errors.RestartBudgetError`` propagates when it runs out).
+    """
+    checkpointer.save(init_state, 0)
+    checkpointer.wait()
+    state = init_state
+    step = 0
+    while step < num_steps:
+        try:
+            state = step_fn(state, step)
+        except errors.RestartBudgetError:
+            raise
+        except Exception:
+            decision = policy.on_failure()   # raises when budget exhausted
+            checkpointer.wait()
+            state = checkpointer.restore(init_state, step=decision.restore_step)
+            step = decision.replay_from_step
+            continue
+        policy.monitor.heartbeat(step, host_id)
+        step += 1
+        if step % checkpoint_every == 0 and step < num_steps:
+            checkpointer.save(state, step)
+    checkpointer.wait()
+    return state

@@ -7,10 +7,27 @@ refilled from the request queue by resetting that slot's cache position
 (per-slot ``pos`` makes mixed-depth batches correct — attention masks by
 ``kv_valid_len``). This is the serving shape the paper's SpMV targets:
 weight-bound batched matvec at small per-step batch.
+
+Degradation model (the fault-injection axis): the engine degrades
+*gracefully* instead of growing without bound or crashing mid-batch —
+
+  * **backpressure** — ``submit`` rejects with the typed status
+    ``errors.QUEUE_FULL`` once the queue holds ``max_queue`` requests;
+  * **deadlines** — a request with ``deadline_ticks`` set is expired
+    (status ``errors.DEADLINE_EXCEEDED``, slot freed) when that many
+    ticks pass after submission without completion;
+  * **tick retry** — a failing decode step is retried up to
+    ``max_step_retries`` times with ``retry_backoff_s`` backoff. The
+    step function is pure (state is only assigned on success), so a
+    retried tick is bit-identical to a never-failed one. Exhaustion
+    raises ``errors.TickError``;
+  * **health** — :meth:`health` snapshots the counters so a supervisor
+    can alarm on rejection/expiry/retry rates.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -18,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import errors
 from repro.models.model import Model
 
 from .decode import build_decode_fn
@@ -30,16 +48,28 @@ class Request:
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # degradation bookkeeping
+    deadline_ticks: Optional[int] = None   # None = no deadline
+    status: str = errors.ACCEPTED
+    submitted_tick: Optional[int] = None
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, slots: int = 8,
-                 max_len: int = 512, eos_id: Optional[int] = None):
+                 max_len: int = 512, eos_id: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 max_step_retries: int = 0,
+                 retry_backoff_s: float = 0.0,
+                 sleep=time.sleep):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.max_queue = max_queue
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self._sleep = sleep
         self.queue: deque[Request] = deque()
         self.active: list[Optional[Request]] = [None] * slots
         self._remaining_prompt: list[np.ndarray] = [np.zeros(0, np.int32)] * slots
@@ -48,10 +78,29 @@ class ServingEngine:
         self.next_token = np.zeros((slots,), np.int32)
         self.step_fn = build_decode_fn(model)
         self.ticks = 0
+        self.completed = 0
+        self.rejected = 0
+        self.retries = 0
+        self.deadline_expired = 0
+        self.expired: list[Request] = []
+        self.last_error: Optional[str] = None
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> str:
+        """Enqueue a request; returns its typed admission status.
+
+        ``errors.ACCEPTED`` on success, ``errors.QUEUE_FULL`` when the
+        bounded queue is at capacity (the request is *not* enqueued —
+        typed rejection instead of unbounded growth).
+        """
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.status = errors.QUEUE_FULL
+            self.rejected += 1
+            return req.status
+        req.status = errors.ACCEPTED
+        req.submitted_tick = self.ticks
         self.queue.append(req)
+        return req.status
 
     def _admit(self) -> None:
         for s in range(self.slots):
@@ -73,8 +122,60 @@ class ServingEngine:
         self.state = jax.tree_util.tree_map(zero_slot, self.state)
 
     # ------------------------------------------------------------------
+    def _expire(self, req: Request) -> None:
+        req.status = errors.DEADLINE_EXCEEDED
+        self.deadline_expired += 1
+        self.expired.append(req)
+
+    def _expire_deadlines(self) -> None:
+        """Drop queued/active requests whose deadline has passed."""
+        def overdue(req: Request) -> bool:
+            return (req.deadline_ticks is not None
+                    and req.submitted_tick is not None
+                    and self.ticks - req.submitted_tick >= req.deadline_ticks)
+
+        if any(overdue(r) for r in self.queue):
+            keep = deque()
+            for req in self.queue:
+                self._expire(req) if overdue(req) else keep.append(req)
+            self.queue = keep
+        for s, req in enumerate(self.active):
+            if req is not None and overdue(req):
+                self._expire(req)
+                self.active[s] = None
+
+    def _step_with_retry(self, tokens):
+        """Run the decode step, retrying injected/transient failures.
+
+        ``step_fn`` is functional — ``self.state``/``self.pos`` are only
+        assigned by the caller on success — so a retry re-runs the exact
+        same computation and the surviving tick is bit-identical to one
+        that never failed. Raises ``errors.TickError`` when
+        ``max_step_retries`` is exhausted.
+        """
+        attempts = self.max_step_retries + 1
+        for attempt in range(attempts):
+            try:
+                return self.step_fn(
+                    self.params, self.state,
+                    jnp.asarray(tokens)[:, None], self.pos,
+                )
+            except Exception as e:  # noqa: BLE001 — injected faults are RuntimeErrors
+                self.last_error = f"{type(e).__name__}: {e}"
+                if attempt + 1 >= attempts:
+                    raise errors.TickError(errors.reason(
+                        errors.TICK_FAILED,
+                        f"decode step failed {attempts} time(s); "
+                        f"last: {self.last_error}",
+                    )) from e
+                self.retries += 1
+                if self.retry_backoff_s:
+                    self._sleep(self.retry_backoff_s * (2 ** attempt))
+
+    # ------------------------------------------------------------------
     def tick(self) -> list[Request]:
         """One decode step for the whole batch. Returns finished requests."""
+        self._expire_deadlines()
         self._admit()
         tokens = np.zeros((self.slots,), np.int32)
         for s, req in enumerate(self.active):
@@ -85,9 +186,7 @@ class ServingEngine:
             else:
                 tokens[s] = self.next_token[s]
 
-        logits, self.state = self.step_fn(
-            self.params, self.state, jnp.asarray(tokens)[:, None], self.pos
-        )
+        logits, self.state = self._step_with_retry(tokens)
         self.pos = self.pos + 1
         picked = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
 
@@ -106,6 +205,7 @@ class ServingEngine:
             if len(req.generated) >= req.max_new_tokens or hit_eos:
                 req.done = True
                 finished.append(req)
+                self.completed += 1
                 self.active[s] = None
         self.ticks += 1
         return finished
@@ -115,3 +215,17 @@ class ServingEngine:
         while (self.queue or any(self.active)) and self.ticks < max_ticks:
             done.extend(self.tick())
         return done
+
+    # ------------------------------------------------------------------
+    def health(self) -> dict:
+        """Counter snapshot for supervisors (cheap, host-only)."""
+        return {
+            "ticks": self.ticks,
+            "queue_depth": len(self.queue),
+            "active_slots": sum(r is not None for r in self.active),
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "retries": self.retries,
+            "deadline_expired": self.deadline_expired,
+            "last_error": self.last_error,
+        }

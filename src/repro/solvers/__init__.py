@@ -7,7 +7,16 @@ drivers then apply it inside single-trace ``lax.while_loop``s. See
 ``solvers/README.md`` for the static-metadata/while-loop contract.
 """
 from .operator import CBLinearOperator  # noqa: F401
-from .krylov import SolveResult, bicgstab, cg, gmres  # noqa: F401
+from .krylov import (  # noqa: F401
+    Attempt,
+    RobustSolveResult,
+    SolveResult,
+    SolverStatus,
+    bicgstab,
+    cg,
+    gmres,
+    robust_solve,
+)
 from .precond import (  # noqa: F401
     BlockJacobiPreconditioner,
     DiagScatter,

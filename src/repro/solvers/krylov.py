@@ -12,19 +12,46 @@ All solvers stop on ``||r||_2 <= tol * ||b||_2`` (relative residual, the
 same criterion the numpy/scipy references in the tests use so iteration
 counts are comparable) or on ``maxiter``.
 
+Breakdown awareness (the hardened failure model, ``repro.errors``): the
+loop carry additionally holds an int32 ``flag`` plus best-iterate
+tracking. Every iteration checks — *inside the trace, no host round
+trips* —
+
+  * **breakdown**:   a Krylov scalar denominator collapsed (|rho| at the
+    dtype's tiny scale; for CG also non-positive curvature p^T A p <= 0,
+    i.e. the operator is not SPD);
+  * **non-finite**:  NaN/Inf reached the residual (poisoned iterate,
+    corrupted payload);
+  * **divergence**:  ||r|| > divtol * ||b||;
+  * **stagnation**:  no new best residual for ``stall_limit``
+    consecutive iterations (cycles, for GMRES).
+
+Any flag stops the loop; ``SolveResult.status`` reports the terminal
+``errors.SolverStatus``, and ``SolveResult.x`` is always the *best*
+iterate seen (bit-identical to the final iterate on convergence: the
+loop exits on the first sub-tolerance residual, which is therefore the
+strict minimum). ``robust_solve`` chains CG -> BiCGStab -> GMRES(m) on
+top, restarting each attempt from the best iterate so far.
+
 ``_TRACE_COUNTS`` increments at *trace* time only — the conformance
 trace-count test asserts a repeated solve re-enters the compiled
-executable instead of retracing.
+executable instead of retracing. ``robust_solve`` preserves the
+guarantee: the fallback chain only re-invokes the already-jitted
+solvers with identical static arguments.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro import errors
+from repro.errors import SolverStatus
 
 from .operator import CBLinearOperator
 
@@ -33,21 +60,35 @@ from .operator import CBLinearOperator
 # untouched — the no-per-iteration-recompilation proof used by the tests.
 _TRACE_COUNTS: collections.Counter = collections.Counter()
 
+_OK = jnp.int32(SolverStatus.OK)
+_MAXITER = jnp.int32(SolverStatus.MAXITER)
+_BREAKDOWN = jnp.int32(SolverStatus.BREAKDOWN)
+_NONFINITE = jnp.int32(SolverStatus.NONFINITE)
+_STAGNATION = jnp.int32(SolverStatus.STAGNATION)
+_DIVERGED = jnp.int32(SolverStatus.DIVERGED)
+
 
 @dataclasses.dataclass
 class SolveResult:
     """Solution + convergence record (a pytree; shapes fixed by maxiter)."""
 
-    x: jax.Array           # (n,) solution estimate
+    x: jax.Array           # (n,) best iterate (== final iterate on success)
     iterations: jax.Array  # () int32 — iterations actually run
     residual: jax.Array    # () f32 — final ||r||_2
     converged: jax.Array   # () bool — hit tol before maxiter
     history: jax.Array     # (maxiter + 1,) f32 — ||r_k||, -1.0 = unreached
+    status: jax.Array      # () int32 — errors.SolverStatus terminal code
+
+    @property
+    def reason(self) -> str:
+        """Host-side reason code for ``status`` (``repro.errors``)."""
+        return errors.solver_reason(int(self.status))
 
 
 jax.tree_util.register_dataclass(
     SolveResult,
-    data_fields=["x", "iterations", "residual", "converged", "history"],
+    data_fields=["x", "iterations", "residual", "converged", "history",
+                 "status"],
     meta_fields=[],
 )
 
@@ -56,23 +97,80 @@ def _apply_M(M, r: jax.Array) -> jax.Array:
     return r if M is None else M.apply(r)
 
 
+def _guard_tiny(dtype) -> jax.Array:
+    """Smallest safe denominator magnitude for ``dtype``.
+
+    Dtype-aware on purpose: ``float16``'s smallest normal is ~6e-5 — a
+    float32-scale constant (1e-30) would wave through denominators whose
+    reciprocal overflows half precision to Inf. ``bfloat16`` shares
+    float32's exponent range, so its guard lands at the same scale.
+    """
+    dt = jnp.dtype(dtype)
+    if not jnp.issubdtype(dt, jnp.inexact):
+        dt = jnp.dtype(jnp.float32)
+    return jnp.asarray(jnp.finfo(dt).tiny, dt)
+
+
 def _safe_div(num, den):
-    """num / den with a 0 denominator mapped to 0 (post-convergence guards:
-    once r == 0 every Krylov scalar degenerates 0/0; the loop predicate has
-    already gone False, but while_loop still evaluates the body trace)."""
-    ok = den != 0
+    """num / den with a collapsed denominator mapped to 0.
+
+    Post-convergence guard (once r == 0 every Krylov scalar degenerates
+    0/0 — the loop predicate has already gone False, but while_loop still
+    evaluates the body trace) *and* the breakdown guard: a denominator at
+    or below the dtype's tiny scale produces 0, leaving the iterate
+    untouched while the body's flag logic reports BREAKDOWN. The guard
+    scale follows ``den``'s dtype (see :func:`_guard_tiny`)."""
+    den = jnp.asarray(den)
+    ok = jnp.abs(den) > _guard_tiny(den.dtype)
     return jnp.where(ok, num, 0.0) / jnp.where(ok, den, 1.0)
 
 
 def _norm(v: jax.Array) -> jax.Array:
+    """||v||_2, accumulated in float32 for sub-f32 inputs.
+
+    bf16/f16 squares lose almost all mantissa (and a long bf16 sum
+    saturates once the partial sum outgrows the 8-bit mantissa's ulp),
+    so low-precision iterates are upcast before the square-sum."""
+    v = jnp.asarray(v)
+    if jnp.issubdtype(v.dtype, jnp.inexact) and \
+            jnp.finfo(v.dtype).bits < 32:
+        v = v.astype(jnp.float32)
     return jnp.sqrt(jnp.sum(v * v))
 
 
-def _result(x, k, rnorm, stop, hist) -> SolveResult:
+def _classify(flag, *, nonfinite, breakdown, diverged, stagnated):
+    """Priority-merge the in-loop failure predicates into the carry flag.
+
+    An already-set flag wins (the loop exits on the iteration that set
+    it; this keeps the body idempotent under while_loop's trailing trace
+    evaluation)."""
+    new = jnp.where(
+        nonfinite, _NONFINITE,
+        jnp.where(breakdown, _BREAKDOWN,
+                  jnp.where(diverged, _DIVERGED,
+                            jnp.where(stagnated, _STAGNATION, _OK))))
+    return jnp.where(flag != _OK, flag, new).astype(jnp.int32)
+
+
+def _result(x, k, rnorm, stop, hist, flag) -> SolveResult:
+    converged = rnorm <= stop
+    status = jnp.where(
+        ~jnp.isfinite(rnorm), _NONFINITE,
+        jnp.where(converged, _OK,
+                  jnp.where(flag != _OK, flag, _MAXITER)))
     return SolveResult(
         x=x, iterations=k.astype(jnp.int32), residual=rnorm,
-        converged=rnorm <= stop, history=hist,
+        converged=converged, history=hist, status=status.astype(jnp.int32),
     )
+
+
+def _track_best(x, rnorm, best_x, best, stall):
+    """Best-iterate / stagnation bookkeeping shared by the loop bodies."""
+    improved = rnorm < best
+    best_x = jnp.where(improved, x, best_x)
+    best = jnp.minimum(best, rnorm)
+    stall = jnp.where(improved, 0, stall + 1).astype(jnp.int32)
+    return best_x, best, stall
 
 
 # ---------------------------------------------------------------------------
@@ -92,11 +190,18 @@ def cg(
     maxiter: int = 200,
     impl: str = "pallas",
     interpret: bool | None = None,
+    divtol: float = 1e8,
+    stall_limit: int = 50,
 ) -> SolveResult:
-    """Preconditioned conjugate gradients for SPD ``A``."""
+    """Preconditioned conjugate gradients for SPD ``A``.
+
+    Breakdown flag: non-positive curvature ``p^T A p <= tiny`` (the
+    operator is singular or not SPD) or a collapsed ``rho``. See the
+    module docstring for the other in-loop failure flags."""
     _TRACE_COUNTS["cg"] += 1
     b = b.astype(jnp.float32)
     mv = lambda v: A.matvec(v, impl=impl, interpret=interpret)
+    tiny = _guard_tiny(b.dtype)
 
     x = jnp.zeros_like(b) if x0 is None else x0.astype(jnp.float32)
     r = b if x0 is None else b - mv(x)
@@ -105,17 +210,19 @@ def cg(
     rz = jnp.vdot(r, z)
     rnorm = _norm(r)
     stop = tol * _norm(b)
+    blowup = divtol * jnp.maximum(_norm(b), tiny)
     hist = jnp.full(maxiter + 1, -1.0, jnp.float32).at[0].set(rnorm)
 
     def cond(state):
-        k, _x, _r, _p, _rz, rnorm, _h = state
-        return (k < maxiter) & (rnorm > stop)
+        k, _x, _r, _p, _rz, rnorm, _h, flag, *_ = state
+        return (k < maxiter) & (rnorm > stop) & (flag == _OK)
 
     def body(state):
         _TRACE_COUNTS["cg_body"] += 1
-        k, x, r, p, rz, _rnorm, hist = state
+        k, x, r, p, rz, _rnorm, hist, flag, best_x, best, stall = state
         q = mv(p)
-        alpha = _safe_div(rz, jnp.vdot(p, q))
+        den = jnp.vdot(p, q)
+        alpha = _safe_div(rz, den)
         x = x + alpha * p
         r = r - alpha * q
         z = _apply_M(M, r)
@@ -123,12 +230,22 @@ def cg(
         p = z + _safe_div(rz_new, rz) * p
         rnorm = _norm(r)
         hist = hist.at[k + 1].set(rnorm)
-        return (k + 1, x, r, p, rz_new, rnorm, hist)
+        best_x, best, stall = _track_best(x, rnorm, best_x, best, stall)
+        flag = _classify(
+            flag,
+            nonfinite=~jnp.isfinite(rnorm),
+            breakdown=(den <= tiny) | (jnp.abs(rz) <= tiny),
+            diverged=rnorm > blowup,
+            stagnated=stall >= stall_limit,
+        )
+        return (k + 1, x, r, p, rz_new, rnorm, hist, flag,
+                best_x, best, stall)
 
-    k, x, _r, _p, _rz, rnorm, hist = lax.while_loop(
-        cond, body, (jnp.int32(0), x, r, p, rz, rnorm, hist)
-    )
-    return _result(x, k, rnorm, stop, hist)
+    state = (jnp.int32(0), x, r, p, rz, rnorm, hist, _OK,
+             x, rnorm, jnp.int32(0))
+    state = lax.while_loop(cond, body, state)
+    k, _x, _r, _p, _rz, rnorm, hist, flag, best_x, _best, _stall = state
+    return _result(best_x, k, rnorm, stop, hist, flag)
 
 
 # ---------------------------------------------------------------------------
@@ -148,11 +265,17 @@ def bicgstab(
     maxiter: int = 200,
     impl: str = "pallas",
     interpret: bool | None = None,
+    divtol: float = 1e8,
+    stall_limit: int = 50,
 ) -> SolveResult:
-    """Preconditioned BiCGStab for general (nonsymmetric) ``A``."""
+    """Preconditioned BiCGStab for general (nonsymmetric) ``A``.
+
+    Breakdown flag: the classic BiCGStab scalars collapsing — ``rho =
+    <r0hat, r>`` or ``<r0hat, v>`` at the dtype's tiny scale."""
     _TRACE_COUNTS["bicgstab"] += 1
     b = b.astype(jnp.float32)
     mv = lambda v: A.matvec(v, impl=impl, interpret=interpret)
+    tiny = _guard_tiny(b.dtype)
 
     x = jnp.zeros_like(b) if x0 is None else x0.astype(jnp.float32)
     r = b if x0 is None else b - mv(x)
@@ -164,22 +287,25 @@ def bicgstab(
     p = jnp.zeros_like(b)
     rnorm = _norm(r)
     stop = tol * _norm(b)
+    blowup = divtol * jnp.maximum(_norm(b), tiny)
     hist = jnp.full(maxiter + 1, -1.0, jnp.float32).at[0].set(rnorm)
 
     def cond(state):
         k = state[0]
-        rnorm = state[-2]
-        return (k < maxiter) & (rnorm > stop)
+        rnorm, flag = state[8], state[10]
+        return (k < maxiter) & (rnorm > stop) & (flag == _OK)
 
     def body(state):
         _TRACE_COUNTS["bicgstab_body"] += 1
-        k, x, r, rho, alpha, omega, v, p, _rnorm, hist = state
+        (k, x, r, rho, alpha, omega, v, p, _rnorm, hist, flag,
+         best_x, best, stall) = state
         rho_new = jnp.vdot(r0hat, r)
         beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
         p = r + beta * (p - omega * v)
         phat = _apply_M(M, p)
         v = mv(phat)
-        alpha = _safe_div(rho_new, jnp.vdot(r0hat, v))
+        r0v = jnp.vdot(r0hat, v)
+        alpha = _safe_div(rho_new, r0v)
         s = r - alpha * v
         shat = _apply_M(M, s)
         t = mv(shat)
@@ -188,13 +314,23 @@ def bicgstab(
         r = s - omega * t
         rnorm = _norm(r)
         hist = hist.at[k + 1].set(rnorm)
-        return (k + 1, x, r, rho_new, alpha, omega, v, p, rnorm, hist)
+        best_x, best, stall = _track_best(x, rnorm, best_x, best, stall)
+        flag = _classify(
+            flag,
+            nonfinite=~jnp.isfinite(rnorm),
+            breakdown=(jnp.abs(rho_new) <= tiny) | (jnp.abs(r0v) <= tiny),
+            diverged=rnorm > blowup,
+            stagnated=stall >= stall_limit,
+        )
+        return (k + 1, x, r, rho_new, alpha, omega, v, p, rnorm, hist,
+                flag, best_x, best, stall)
 
-    state = (jnp.int32(0), x, r, rho, alpha, omega, v, p, rnorm, hist)
+    state = (jnp.int32(0), x, r, rho, alpha, omega, v, p, rnorm, hist,
+             _OK, x, rnorm, jnp.int32(0))
     state = lax.while_loop(cond, body, state)
-    k, x = state[0], state[1]
-    rnorm, hist = state[-2], state[-1]
-    return _result(x, k, rnorm, stop, hist)
+    k = state[0]
+    rnorm, hist, flag, best_x = state[8], state[9], state[10], state[11]
+    return _result(best_x, k, rnorm, stop, hist, flag)
 
 
 # ---------------------------------------------------------------------------
@@ -215,6 +351,8 @@ def gmres(
     maxiter: int = 20,
     impl: str = "pallas",
     interpret: bool | None = None,
+    divtol: float = 1e8,
+    stall_limit: int = 5,
 ) -> SolveResult:
     """Restarted GMRES(m) with left preconditioning.
 
@@ -224,7 +362,13 @@ def gmres(
     orthogonalized by two-pass classical Gram-Schmidt (unset basis rows
     are zero, so the projection needs no masking). The residual history
     records the TRUE residual at each restart boundary.
-    """
+
+    In-cycle Arnoldi breakdown (``h_{j+1,j} ~ 0``) is the *lucky* kind —
+    the Krylov space closed — and is handled by zeroing the next basis
+    vector, not flagged. The failure flags operate at restart
+    granularity: non-finite / diverged true residual, or ``stall_limit``
+    cycles without a new best (the classic GMRES(m) stall, e.g. a pure
+    rotation at small ``m``)."""
     _TRACE_COUNTS["gmres"] += 1
     b = b.astype(jnp.float32)
     n = b.shape[0]
@@ -236,7 +380,8 @@ def gmres(
     rnorm = _norm(r)
     stop = tol * _norm(b)
     hist = jnp.full(maxiter + 1, -1.0, jnp.float32).at[0].set(rnorm)
-    tiny = jnp.float32(1e-30)
+    tiny = jnp.sqrt(_guard_tiny(b.dtype))
+    blowup = divtol * jnp.maximum(_norm(b), tiny)
 
     def arnoldi_step(j, carry):
         V, H = carry
@@ -266,21 +411,175 @@ def gmres(
         return x + V[:restart].T @ y
 
     def cond(state):
-        k, _x, _r, rnorm, _h = state
-        return (k < maxiter) & (rnorm > stop)
+        k, _x, _r, rnorm, _h, flag, *_ = state
+        return (k < maxiter) & (rnorm > stop) & (flag == _OK)
 
     def body(state):
         _TRACE_COUNTS["gmres_body"] += 1
-        k, x, r, _rnorm, hist = state
+        k, x, r, _rnorm, hist, flag, best_x, best, stall = state
         x = cycle(x, r)
         # the TRUE residual, computed once and carried: it both feeds the
         # history/stopping test and seeds the next cycle's Krylov space
         r = b - mv(x)
         rnorm = _norm(r)
         hist = hist.at[k + 1].set(rnorm)
-        return (k + 1, x, r, rnorm, hist)
+        best_x, best, stall = _track_best(x, rnorm, best_x, best, stall)
+        flag = _classify(
+            flag,
+            nonfinite=~jnp.isfinite(rnorm),
+            breakdown=jnp.bool_(False),
+            diverged=rnorm > blowup,
+            stagnated=stall >= stall_limit,
+        )
+        return (k + 1, x, r, rnorm, hist, flag, best_x, best, stall)
 
-    k, x, _r, rnorm, hist = lax.while_loop(
-        cond, body, (jnp.int32(0), x, r, rnorm, hist)
+    state = (jnp.int32(0), x, r, rnorm, hist, _OK, x, rnorm, jnp.int32(0))
+    state = lax.while_loop(cond, body, state)
+    k, _x, _r, rnorm, hist, flag, best_x, _best, _stall = state
+    return _result(best_x, k, rnorm, stop, hist, flag)
+
+
+# ---------------------------------------------------------------------------
+# robust_solve — the breakdown-aware fallback chain.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Attempt:
+    """Host-side record of one solver attempt inside ``robust_solve``."""
+
+    solver: str
+    preconditioned: bool
+    status: int                  # errors.SolverStatus value
+    reason: str                  # errors.solver_reason(status)
+    converged: bool
+    iterations: int
+    residual: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustSolveResult:
+    """Outcome of the fallback chain: the winning (or best) attempt."""
+
+    x: jax.Array
+    converged: bool
+    status: int                  # errors.SolverStatus of the final verdict
+    reason: str
+    solver: str                  # solver that produced ``x``
+    residual: float
+    attempts: tuple[Attempt, ...]
+    result: SolveResult          # full record of the decisive attempt
+    sanitized_x0: bool = False   # a non-finite warm start was dropped
+
+
+_CHAIN_SOLVERS = {"cg": cg, "bicgstab": bicgstab, "gmres": gmres}
+
+
+def robust_solve(
+    A: CBLinearOperator,
+    b: jax.Array,
+    M=None,
+    x0: jax.Array | None = None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 200,
+    restart: int = 20,
+    methods: tuple[str, ...] = ("cg", "bicgstab", "gmres"),
+    fallback_preconditioner=None,
+    max_attempts: int | None = None,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    divtol: float = 1e8,
+    stall_limit: int = 50,
+) -> RobustSolveResult:
+    """Breakdown-aware driver: CG -> BiCGStab -> GMRES(m) with bounded retry.
+
+    A host-level supervisor over the jitted solvers — the *solvers* stay
+    single-trace (the chain re-invokes them with identical static
+    arguments, so a second ``robust_solve`` call never retraces); only
+    the attempt accounting runs on host.
+
+    Policy per attempt:
+
+      * every attempt warm-starts from the **best iterate seen so far**
+        (restart-from-best), falling back to ``x0`` / zero;
+      * a converged attempt short-circuits the chain;
+      * after the base ladder, ``fallback_preconditioner`` (if given)
+        re-runs the ladder once with the escalated preconditioner;
+      * ``max_attempts`` bounds the total number of solver invocations
+        (default: the full ladder, once per preconditioner level).
+
+    Detection contract (``repro.errors``): a non-finite right-hand side
+    is unsolvable and raises ``NonFiniteError`` immediately; a
+    non-finite ``x0`` is *tolerated* by sanitizing to a cold start
+    (recorded in ``sanitized_x0``). A chain that exhausts its attempts
+    returns ``converged=False`` with the best attempt's iterate and the
+    final attempt's typed status — never an untyped failure.
+    """
+    b = jnp.asarray(b)
+    if not bool(jnp.all(jnp.isfinite(b))):
+        raise errors.NonFiniteError(
+            "robust_solve: right-hand side contains non-finite entries"
+        )
+    sanitized = False
+    if x0 is not None and not bool(jnp.all(jnp.isfinite(x0))):
+        x0, sanitized = None, True   # poisoned warm start -> cold start
+
+    unknown = [m for m in methods if m not in _CHAIN_SOLVERS]
+    if unknown:
+        raise ValueError(
+            f"unknown methods {unknown}; choose from "
+            f"{sorted(_CHAIN_SOLVERS)}"
+        )
+
+    ladder = [(name, M, False) for name in methods]
+    if fallback_preconditioner is not None:
+        ladder += [(name, fallback_preconditioner, True) for name in methods]
+    if max_attempts is not None:
+        ladder = ladder[:max_attempts]
+    if not ladder:
+        raise ValueError("robust_solve: empty fallback ladder")
+
+    gmres_cycles = max(1, math.ceil(maxiter / restart))
+    common = dict(tol=tol, impl=impl, interpret=interpret, divtol=divtol)
+
+    attempts: list[Attempt] = []
+    best_x, best_rnorm = x0, float("inf")
+    best_attempt: tuple[str, SolveResult] | None = None
+    res = None
+    name = methods[0]
+    for name, Mi, escalated in ladder:
+        solver = _CHAIN_SOLVERS[name]
+        if name == "gmres":
+            res = solver(A, b, Mi, x0=best_x, maxiter=gmres_cycles,
+                         restart=restart, **common)
+        else:
+            res = solver(A, b, Mi, x0=best_x, maxiter=maxiter,
+                         stall_limit=stall_limit, **common)
+        status = int(res.status)
+        rnorm = float(res.residual)
+        attempts.append(Attempt(
+            solver=name, preconditioned=Mi is not None, status=status,
+            reason=errors.solver_reason(status),
+            converged=bool(res.converged),
+            iterations=int(res.iterations), residual=rnorm,
+        ))
+        if math.isfinite(rnorm) and rnorm < best_rnorm:
+            best_rnorm, best_x = rnorm, res.x
+            best_attempt = (name, res)
+        if status == SolverStatus.OK:
+            return RobustSolveResult(
+                x=res.x, converged=True, status=SolverStatus.OK,
+                reason=errors.solver_reason(SolverStatus.OK), solver=name,
+                residual=rnorm, attempts=tuple(attempts), result=res,
+                sanitized_x0=sanitized,
+            )
+
+    # chain exhausted: surface the best iterate with a typed verdict
+    final_name, final_res = best_attempt if best_attempt else (name, res)
+    status = int(attempts[-1].status)
+    return RobustSolveResult(
+        x=final_res.x, converged=False, status=status,
+        reason=errors.solver_reason(status), solver=final_name,
+        residual=float(final_res.residual), attempts=tuple(attempts),
+        result=final_res, sanitized_x0=sanitized,
     )
-    return _result(x, k, rnorm, stop, hist)

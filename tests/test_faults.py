@@ -1,0 +1,621 @@
+"""Fault-injection axis: every injector in ``runtime/faults.py`` is either
+detected with a typed reason from ``repro.errors`` or tolerated with a
+correct result — solvers, artifacts, plan cache, serving, supervision."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import errors
+from repro.autotune import Plan, PlanCache
+from repro.checkpoint import Checkpointer
+from repro.core.cb_matrix import CBMatrix
+from repro.data import matrices
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.runtime import (
+    FlakyStepFn,
+    HeartbeatMonitor,
+    RestartPolicy,
+    corrupt_packed_values,
+    flip_file_bytes,
+    lose_host,
+    plan_mesh,
+    poison_vector,
+    reshard_instructions,
+    run_supervised,
+)
+from repro.serving import Request, ServingEngine
+from repro.solvers import CBLinearOperator, SolverStatus, cg, gmres, robust_solve
+from repro.solvers import krylov as krylov_mod
+
+pytestmark = pytest.mark.robustness
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _spd(d=64, seed=1, bandwidth=7):
+    r, c, v = matrices.spd_banded(d, bandwidth=bandwidth, seed=seed)
+    cb = CBMatrix.from_coo(r, c, v.astype(np.float32), (d, d),
+                           block_size=16, val_dtype=np.float32)
+    return cb, CBLinearOperator.from_cb(cb)
+
+
+def _rhs(d, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(d).astype(np.float32))
+
+
+def _mini_plan(**overrides):
+    kw = dict(
+        structure_hash="0" * 64, shape=(16, 16), nnz=4, val_dtype="float32",
+        block_size=16, th0=0.15, th1=4, th2=32, colagg=False, group_size=4,
+        mode="heuristic", predicted_padded_elems=100, predicted_steps=2,
+        measured_padded_elems=90, measured_steps=2,
+    )
+    kw.update(overrides)
+    return Plan(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injectors_are_deterministic(tmp_path):
+    p1, p2 = tmp_path / "a.bin", tmp_path / "b.bin"
+    payload = bytes(range(256)) * 8
+    p1.write_bytes(payload)
+    p2.write_bytes(payload)
+    f1 = flip_file_bytes(p1, n=4, seed=7)
+    f2 = flip_file_bytes(p2, n=4, seed=7)
+    assert f1 == f2
+    assert p1.read_bytes() == p2.read_bytes()
+    assert p1.read_bytes() != payload
+
+    x = np.arange(32, dtype=np.float32)
+    a = poison_vector(x, n=3, seed=5)
+    b = poison_vector(x, n=3, seed=5)
+    np.testing.assert_array_equal(np.isnan(a), np.isnan(b))
+    assert np.isnan(a).sum() == 3
+    assert np.all(np.isfinite(x))          # input untouched
+
+    cb, _ = _spd()
+    c1 = corrupt_packed_values(cb, n=2, seed=3)
+    c2 = corrupt_packed_values(cb, n=2, seed=3)
+    np.testing.assert_array_equal(c1.packed, c2.packed)
+    assert not np.array_equal(c1.packed, cb.packed)
+
+
+def test_flaky_step_fn_counts_and_raises():
+    fn = FlakyStepFn(lambda v: v + 1, fail_on={0, 2})
+    with pytest.raises(errors.InjectedFault) as e:
+        fn(1)
+    assert e.value.code == errors.INJECTED
+    assert fn(1) == 2
+    with pytest.raises(errors.InjectedFault):
+        fn(1)
+    assert fn(10) == 11
+    assert (fn.calls, fn.failures) == (4, 2)
+
+
+# ---------------------------------------------------------------------------
+# Artifact integrity: checksummed npz + validate()
+# ---------------------------------------------------------------------------
+
+def test_cb_save_load_checksum_roundtrip(tmp_path):
+    cb, _ = _spd()
+    p = tmp_path / "m.npz"
+    cb.save(p)
+    lo = CBMatrix.load(p)
+    np.testing.assert_array_equal(lo.to_dense(), cb.to_dense())
+
+
+def test_cb_byteflip_detected_or_bit_correct(tmp_path):
+    """Every byte flip is detected (typed ArtifactError) or harmless."""
+    cb, _ = _spd()
+    dense = cb.to_dense()
+    p = str(tmp_path / "m.npz")
+    detected = 0
+    for seed in range(10):
+        cb.save(p)
+        flip_file_bytes(p, n=1, seed=seed)
+        try:
+            lo = CBMatrix.load(p)
+        except errors.ArtifactError as e:
+            assert e.code in (errors.ARTIFACT_CORRUPT, errors.ARTIFACT_SCHEMA)
+            detected += 1
+        else:
+            # tolerated is only acceptable when the payload is bit-correct
+            np.testing.assert_array_equal(lo.to_dense(), dense)
+    assert detected >= 8        # flips overwhelmingly land in checked bytes
+
+
+def test_cb_multibyte_flip_always_detected(tmp_path):
+    cb, _ = _spd()
+    p = str(tmp_path / "m.npz")
+    for seed in range(6):
+        cb.save(p)
+        flip_file_bytes(p, n=16, seed=seed)
+        with pytest.raises(errors.ArtifactError):
+            CBMatrix.load(p)
+
+
+def test_validate_catches_mutated_metadata():
+    cb, _ = _spd()
+    assert cb.validate() is cb
+    # value pointer past the packed buffer
+    vp = cb.vp_per_blk.copy()
+    real = np.nonzero(cb.nnz_per_blk > 0)[0][0]
+    vp[real] = len(cb.packed) + 64
+    with pytest.raises(errors.ArtifactError):
+        dataclasses.replace(cb, vp_per_blk=vp).validate()
+    # block row index out of range
+    br = cb.blk_row_idx.copy()
+    br[real] = 10_000
+    with pytest.raises(errors.ArtifactError):
+        dataclasses.replace(cb, blk_row_idx=br).validate()
+    # nnz ledger mismatch
+    nz = cb.nnz_per_blk.copy()
+    nz[real] += 1
+    with pytest.raises(errors.ArtifactError):
+        dataclasses.replace(cb, nnz_per_blk=nz).validate()
+    # unknown format code
+    tp = cb.type_per_blk.copy()
+    tp[real] = 99
+    with pytest.raises(errors.ArtifactError):
+        dataclasses.replace(cb, type_per_blk=tp).validate()
+
+
+def test_corrupt_payload_passes_structure_fails_finite_check():
+    cb, _ = _spd()
+    bad = corrupt_packed_values(cb, n=2, seed=0)
+    bad.validate()                       # structure metadata untouched
+    with pytest.raises(errors.NonFiniteError):
+        bad.validate(check_finite=True)
+
+
+def test_nonfinite_policy_on_build_and_update():
+    r = np.array([0, 1, 2])
+    c = np.array([0, 1, 2])
+    v = np.array([1.0, np.nan, 3.0])
+    with pytest.raises(errors.NonFiniteError):
+        CBMatrix.from_coo(r, c, v, (3, 3), block_size=2)
+    cb = CBMatrix.from_coo(r, c, v, (3, 3), block_size=2,
+                           nonfinite="sanitize")
+    assert np.all(np.isfinite(cb.to_dense()))
+    cb_ok = CBMatrix.from_coo(r, c, np.array([1.0, 2.0, 3.0]), (3, 3),
+                              block_size=2)
+    with pytest.raises(errors.NonFiniteError):
+        cb_ok.update_values(np.array([1.0, np.inf, 3.0]))
+    san = cb_ok.update_values(np.array([1.0, np.inf, 3.0]),
+                              nonfinite="sanitize")
+    assert np.all(np.isfinite(san.to_dense()))
+    raw = cb_ok.update_values(np.array([1.0, np.inf, 3.0]),
+                              nonfinite="allow")
+    assert np.isinf(raw.to_dense()).any()
+
+
+def test_structure_drift_is_typed():
+    cb, _ = _spd(d=32)
+    with pytest.raises(errors.StructureDriftError, match="structure drift"):
+        cb.update_from_coo(np.array([0]), np.array([0]), np.array([1.0]))
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache corruption fuzz: every corruption = one counted miss, no crash
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_byteflip_fuzz_v2(tmp_path):
+    cache = PlanCache(tmp_path / "plans")
+    plan = _mini_plan(structure_hash="a" * 64)
+    for seed in range(20):
+        cache.put(plan)                  # fresh, uncorrupted file
+        flip_file_bytes(cache.path_for(plan.structure_hash), n=1, seed=seed)
+        before = cache.hits + cache.misses
+        got = cache.get(plan.structure_hash, shape=(16, 16), nnz=4)
+        assert cache.hits + cache.misses == before + 1
+        if got is not None:              # neutral flip (e.g. whitespace)
+            assert got == plan
+
+
+def test_plan_cache_byteflip_fuzz_v1_migration_path(tmp_path):
+    """v1 files predate the payload checksum, so a flip that still parses
+    as valid JSON can slip through migration — but it must never crash,
+    always count exactly one lookup, and anything returned must pass
+    ``check_valid`` for the requested matrix (a corrupted-but-resolvable
+    plan builds a correct, merely differently-tuned, CBMatrix). The
+    migration re-save stamps a v2 checksum, closing the window."""
+    from repro.autotune import PLAN_SCHEMA_V1
+
+    cache = PlanCache(tmp_path / "plans")
+    legacy_key, struct_key = "e" * 64, "f" * 64
+    v1 = _mini_plan(structure_hash=legacy_key)
+    d = v1.to_json()
+    d["schema"] = PLAN_SCHEMA_V1
+    d["matrix_hash"] = d.pop("structure_hash")
+    d.pop("value_hash")
+    d.pop("payload_checksum")
+    for seed in range(12):
+        with open(cache.path_for(legacy_key), "w") as f:
+            json.dump(d, f, indent=1)
+        flip_file_bytes(cache.path_for(legacy_key), n=1, seed=seed)
+        before = cache.hits + cache.misses
+        got = cache.get(struct_key, legacy_hash=legacy_key,
+                        shape=(16, 16), nnz=4)
+        assert cache.hits + cache.misses == before + 1
+        if got is not None:
+            assert got.structure_hash == struct_key
+            assert got.check_valid(shape=(16, 16), nnz=4) is None
+        # drop any migrated v2 file so each round starts clean
+        import os
+        if os.path.exists(cache.path_for(struct_key)):
+            os.remove(cache.path_for(struct_key))
+
+
+def test_plan_field_tamper_is_counted_stale(tmp_path):
+    """A semantic edit that keeps valid JSON trips the payload checksum."""
+    cache = PlanCache(tmp_path / "plans")
+    plan = _mini_plan(structure_hash="a" * 64)
+    cache.put(plan)
+    path = cache.path_for(plan.structure_hash)
+    with open(path) as f:
+        d = json.load(f)
+    d["group_size"] = 8                  # valid value, silently retuned
+    with open(path, "w") as f:
+        json.dump(d, f, indent=1)
+    before = (cache.hits, cache.misses, cache.stale)
+    assert cache.get(plan.structure_hash, shape=(16, 16), nnz=4) is None
+    assert (cache.hits, cache.misses, cache.stale) == (
+        before[0], before[1] + 1, before[2] + 1)
+
+
+def test_plan_checksum_survives_roundtrip_and_equality(tmp_path):
+    plan = _mini_plan()
+    path = tmp_path / "p.json"
+    plan.save(path)
+    loaded = Plan.load(path)
+    assert loaded == plan                # payload_checksum is compare=False
+    assert loaded.payload_checksum is not None
+    assert loaded.check_valid(shape=(16, 16), nnz=4) is None
+    tampered = dataclasses.replace(loaded, group_size=8)
+    reason = tampered.check_valid()
+    assert reason is not None
+    assert errors.reason_code(reason) == errors.ARTIFACT_CORRUPT
+
+
+def test_from_plan_raises_typed_stale_error():
+    r, c, v = matrices.spd_banded(32, bandwidth=5, seed=0)
+    plan = _mini_plan(shape=(16, 16))
+    with pytest.raises(errors.PlanStaleError, match="plan was made for shape"):
+        CBMatrix.from_plan(r, c, v, (32, 32), plan)
+
+
+# ---------------------------------------------------------------------------
+# Breakdown-aware solvers
+# ---------------------------------------------------------------------------
+
+def _indefinite(d=64, seed=1):
+    """SPD matrix with one diagonal entry negated — CG breaks down."""
+    r, c, v = matrices.spd_banded(d, bandwidth=7, seed=seed)
+    dense = np.zeros((d, d), np.float32)
+    np.add.at(dense, (r, c), v)
+    rr, cc = np.nonzero(dense)
+    vv = dense[rr, cc].copy()
+    vv[(rr == d - 1) & (cc == d - 1)] = -50.0
+    cb = CBMatrix.from_coo(rr, cc, vv, (d, d), block_size=16,
+                           val_dtype=np.float32)
+    return cb, CBLinearOperator.from_cb(cb)
+
+
+def test_cg_flags_breakdown_on_indefinite_matrix():
+    _cb, op = _indefinite()
+    res = cg(op, _rhs(64), tol=1e-10, maxiter=200, impl="reference")
+    assert not bool(res.converged)
+    assert int(res.status) == SolverStatus.BREAKDOWN
+    assert res.reason == "solver-breakdown"
+
+
+def test_cg_flags_nonfinite_rhs_without_iterating():
+    _cb, op = _spd()
+    res = cg(op, jnp.full(64, np.nan, jnp.float32), tol=1e-8, maxiter=50,
+             impl="reference")
+    assert int(res.status) == SolverStatus.NONFINITE
+    assert int(res.iterations) == 0
+
+
+def test_cg_flags_nonfinite_from_corrupt_payload():
+    cb, _ = _spd()
+    bad = CBLinearOperator.from_cb(corrupt_packed_values(cb, n=3, seed=0))
+    res = cg(bad, _rhs(64), tol=1e-8, maxiter=50, impl="reference")
+    assert int(res.status) == SolverStatus.NONFINITE
+    assert not bool(res.converged)
+
+
+def test_cg_flags_divergence_against_divtol():
+    _cb, op = _spd()
+    res = cg(op, _rhs(64), tol=1e-12, maxiter=50, impl="reference",
+             divtol=1e-6)
+    assert int(res.status) == SolverStatus.DIVERGED
+
+
+def test_gmres_flags_stagnation_on_rotation():
+    """GMRES(1) on a rotation matrix famously makes zero progress."""
+    r = np.array([0, 1])
+    c = np.array([1, 0])
+    v = np.array([1.0, -1.0], np.float32)
+    cb = CBMatrix.from_coo(r, c, v, (2, 2), block_size=2,
+                           val_dtype=np.float32)
+    op = CBLinearOperator.from_cb(cb)
+    res = gmres(op, jnp.asarray(np.array([1.0, 0.0], np.float32)),
+                tol=1e-8, restart=1, maxiter=40, impl="reference")
+    assert not bool(res.converged)
+    assert int(res.status) == SolverStatus.STAGNATION
+
+
+def test_solver_returns_best_iterate_on_failure():
+    """On a failed solve, SolveResult.x is the best iterate, not the last."""
+    _cb, op = _indefinite()
+    b = _rhs(64)
+    res = cg(op, b, tol=1e-10, maxiter=200, impl="reference")
+    hist = np.asarray(res.history)
+    reached = hist[hist >= 0]
+    r = np.asarray(b) - np.asarray(op.matvec(res.x, impl="reference"))
+    np.testing.assert_allclose(np.linalg.norm(r), reached.min(),
+                               rtol=1e-3, atol=1e-5)
+
+
+# -- satellite: dtype-aware guards ------------------------------------------
+
+def test_safe_div_respects_f16_tiny():
+    num = jnp.asarray(1.0, jnp.float16)
+    den = jnp.asarray(1e-6, jnp.float16)   # subnormal: 1/den overflows f16
+    assert float(krylov_mod._safe_div(num, den)) == 0.0
+    assert float(krylov_mod._safe_div(num, jnp.asarray(0.5, jnp.float16))) == 2.0
+
+
+def test_norm_upcasts_low_precision():
+    # a bf16 square-sum saturates at 256 (ulp > 1), giving norm 16 not 32
+    assert float(krylov_mod._norm(jnp.ones(1024, jnp.bfloat16))) == \
+        pytest.approx(32.0, rel=1e-2)
+    assert float(krylov_mod._norm(jnp.ones(1024, jnp.float16))) == \
+        pytest.approx(32.0, rel=1e-2)
+
+
+# -- robust_solve -----------------------------------------------------------
+
+def test_robust_solve_recovers_cg_breakdown():
+    cb, op = _indefinite()
+    b = _rhs(64)
+    res = robust_solve(op, b, tol=1e-6, maxiter=300, impl="reference")
+    assert res.converged
+    assert res.attempts[0].solver == "cg"
+    assert not res.attempts[0].converged
+    assert res.solver != "cg"
+    x_ref = np.linalg.solve(cb.to_dense(), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(res.x), x_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_robust_solve_recovers_every_seeded_breakdown_on_corpus():
+    """Acceptance: robust_solve converges every case plain CG fails."""
+    for seed in range(3):
+        _cb, op = _indefinite(seed=seed)
+        b = _rhs(64, seed=seed)
+        plain = cg(op, b, tol=1e-6, maxiter=300, impl="reference")
+        assert not bool(plain.converged)
+        res = robust_solve(op, b, tol=1e-6, maxiter=300, impl="reference")
+        assert res.converged, f"seed {seed}: {res.reason}"
+
+
+def test_robust_solve_rejects_nonfinite_rhs_tolerates_bad_x0():
+    _cb, op = _spd()
+    with pytest.raises(errors.NonFiniteError):
+        robust_solve(op, jnp.full(64, np.inf, jnp.float32), impl="reference")
+    b = _rhs(64)
+    x0 = jnp.asarray(poison_vector(np.zeros(64, np.float32), n=2, seed=0))
+    res = robust_solve(op, b, x0=x0, tol=1e-6, maxiter=300, impl="reference")
+    assert res.converged and res.sanitized_x0
+
+
+def test_robust_solve_preserves_single_trace():
+    """Fallback retries re-invoke the jitted solvers with identical static
+    args — a second robust_solve must not trace anything new."""
+    _cb, op = _indefinite()
+    b = _rhs(64)
+    robust_solve(op, b, tol=1e-6, maxiter=300, impl="reference")
+    snapshot = dict(krylov_mod._TRACE_COUNTS)
+    res = robust_solve(op, b, tol=1e-6, maxiter=300, impl="reference")
+    assert res.converged
+    assert dict(krylov_mod._TRACE_COUNTS) == snapshot
+
+
+# ---------------------------------------------------------------------------
+# Serving degradation
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=128,
+                      attn_chunk=32, remat="none", dtype="float32")
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_serving_queue_backpressure_is_typed():
+    model, params = _tiny_model()
+    eng = ServingEngine(model, params, slots=1, max_len=64, max_queue=1)
+    reqs = [Request(uid=i, prompt=np.array([i + 1], np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    statuses = [eng.submit(r) for r in reqs]
+    assert statuses == [errors.ACCEPTED, errors.QUEUE_FULL, errors.QUEUE_FULL]
+    assert reqs[1].status == errors.QUEUE_FULL
+    assert eng.health()["rejected"] == 2
+    done = eng.run_until_done()
+    assert [r.uid for r in done] == [0]
+
+
+def test_serving_deadline_expires_and_frees_slot():
+    model, params = _tiny_model()
+    eng = ServingEngine(model, params, slots=1, max_len=64)
+    slow = Request(uid=0, prompt=np.array([1], np.int32),
+                   max_new_tokens=500, deadline_ticks=3)
+    quick = Request(uid=1, prompt=np.array([2], np.int32), max_new_tokens=2)
+    eng.submit(slow)
+    eng.submit(quick)
+    done = eng.run_until_done(max_ticks=50)
+    assert [r.uid for r in done] == [1]          # slot was reclaimed
+    assert slow.status == errors.DEADLINE_EXCEEDED
+    assert not slow.done
+    h = eng.health()
+    assert h["deadline_expired"] == 1 and h["completed"] == 1
+
+
+def test_serving_tick_retry_is_bit_identical_to_fault_free():
+    model, params = _tiny_model()
+    prompt = np.array([3, 14, 15], np.int32)
+
+    ref = ServingEngine(model, params, slots=2, max_len=64)
+    ref.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    baseline = ref.run_until_done()[0].generated
+
+    eng = ServingEngine(model, params, slots=2, max_len=64,
+                        max_step_retries=2, retry_backoff_s=0.01,
+                        sleep=lambda s: None)
+    eng.step_fn = FlakyStepFn(eng.step_fn, fail_on={1, 3})
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    out = eng.run_until_done()[0].generated
+    assert out == baseline
+    assert eng.health()["retries"] == 2
+
+
+def test_serving_retry_exhaustion_raises_tick_error():
+    model, params = _tiny_model()
+    eng = ServingEngine(model, params, slots=1, max_len=64,
+                        max_step_retries=1, sleep=lambda s: None)
+    eng.step_fn = FlakyStepFn(eng.step_fn, fail_on=set(range(10)))
+    eng.submit(Request(uid=0, prompt=np.array([1], np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(errors.TickError) as e:
+        eng.tick()
+    assert e.value.code == errors.TICK_FAILED
+    assert "injected" in eng.health()["last_error"].lower()
+
+
+# ---------------------------------------------------------------------------
+# Supervision: checkpoint/restart + heartbeat loss + restart budget
+# ---------------------------------------------------------------------------
+
+def _supervised(tmp_path, fail_on, max_restarts, num_steps=8):
+    def step(state, step_idx):
+        return state * 2 + step_idx
+
+    flaky = FlakyStepFn(step, fail_on=fail_on)
+    ckpt = Checkpointer(str(tmp_path / "ckpt"), async_write=False)
+    mon = HeartbeatMonitor(num_hosts=1, timeout_s=1e9, clock=FakeClock())
+    policy = RestartPolicy(ckpt, mon, max_restarts=max_restarts)
+    final = run_supervised(flaky, np.asarray(1, np.int64),
+                           num_steps=num_steps, checkpointer=ckpt,
+                           policy=policy, checkpoint_every=2)
+    return final, policy
+
+
+def test_failed_step_restarts_from_checkpoint_bitwise(tmp_path):
+    fault_free, _ = _supervised(tmp_path / "a", fail_on=(), max_restarts=0)
+    injected, policy = _supervised(tmp_path / "b", fail_on={5},
+                                   max_restarts=3)
+    assert int(injected) == int(fault_free)      # deterministic replay
+    assert policy.restarts == 1
+
+
+def test_restart_budget_exhaustion_raises(tmp_path):
+    with pytest.raises(errors.RestartBudgetError) as e:
+        _supervised(tmp_path, fail_on=set(range(100)), max_restarts=2)
+    assert e.value.code == errors.RESTART_BUDGET_EXHAUSTED
+
+
+def test_heartbeat_loss_detected_and_drives_remesh(tmp_path):
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_hosts=4, timeout_s=10.0, clock=clock)
+    clock.t = 5.0
+    for h in range(4):
+        mon.heartbeat(0, host_id=h)
+    lose_host(mon, 2)
+    assert mon.check() == [2]
+    assert mon.alive_hosts == [0, 1, 3]
+    ckpt = Checkpointer(str(tmp_path / "ckpt"), async_write=False)
+    ckpt.save(np.asarray(7), 3)
+    decision = RestartPolicy(ckpt, mon).on_failure()
+    assert decision.restore_step == 3
+    assert decision.needs_remesh
+    assert decision.surviving_hosts == [0, 1, 3]
+
+
+def test_straggler_ewma_records_slow_step():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_hosts=1, timeout_s=1e9,
+                           straggler_factor=2.0, clock=clock)
+    for step in range(6):
+        clock.t += 1.0
+        mon.heartbeat(step)
+    clock.t += 10.0                      # one 10x-slow step
+    mon.heartbeat(6)
+    assert [s for s, _d in mon.stragglers] == [6]
+    mon.report_straggler(9, 42.0)
+    assert (9, 42.0) in mon.stragglers
+
+
+def test_plan_mesh_degrades_after_host_loss():
+    full = plan_mesh(32, prefer_model=16)
+    assert full.shape == (2, 16) and full.dropped_devices == 0
+    # lose 8 devices: model width steps down to keep the grid full
+    shrunk = plan_mesh(24, prefer_model=16)
+    assert shrunk.shape == (3, 8) and shrunk.dropped_devices == 0
+    # global batch must stay divisible by the data axis
+    batched = plan_mesh(10, prefer_model=4, global_batch=8)
+    assert batched.shape[0] in (1, 2, 4) and 8 % batched.shape[0] == 0
+    instr = reshard_instructions(full, shrunk)
+    assert instr["old"]["shape"] == (2, 16)
+    assert instr["new"]["shape"] == (3, 8)
+    assert "replay" in instr["data_replay"]
+
+
+def test_plan_mesh_splits_pod_axis():
+    plan = plan_mesh(512, prefer_model=16, pod_size=256)
+    assert plan.axis_names == ("pod", "data", "model")
+    assert plan.shape == (2, 16, 16)
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy plumbing
+# ---------------------------------------------------------------------------
+
+def test_reason_code_roundtrip():
+    text = errors.reason(errors.ARTIFACT_CORRUPT, "checksum mismatch")
+    assert errors.reason_code(text) == errors.ARTIFACT_CORRUPT
+    assert errors.reason_code(None) is None
+    assert errors.reason_code("plain prose sentence") is None
+
+
+def test_exceptions_remain_builtin_compatible():
+    # historical call sites catch ValueError/RuntimeError
+    assert issubclass(errors.ArtifactError, ValueError)
+    assert issubclass(errors.NonFiniteError, ValueError)
+    assert issubclass(errors.StructureDriftError, ValueError)
+    assert issubclass(errors.IngestError, ValueError)
+    assert issubclass(errors.TickError, RuntimeError)
+    assert issubclass(errors.InjectedFault, RuntimeError)
+
+
+def test_solver_reason_covers_all_statuses():
+    for status in SolverStatus:
+        assert errors.solver_reason(status).startswith("solver-")
+    assert "unknown" in errors.solver_reason(99)

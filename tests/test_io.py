@@ -3,6 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from repro import errors
 from repro.core.cb_matrix import CBMatrix
 from repro.core.formats import FormatThresholds
 from repro.core.streams import build_streams, build_super_streams
@@ -106,6 +107,56 @@ def test_mm_rejects_malformed(tmp_path, header, err):
     p = _write(tmp_path, header)
     with pytest.raises(ValueError, match=err):
         load_matrix_market(p)
+
+
+@pytest.mark.robustness
+def test_mm_rejects_nonfinite_values(tmp_path):
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate real general
+2 2 2
+1 1 nan
+2 2 1.0
+""")
+    with pytest.raises(errors.IngestError, match="non-finite"):
+        load_matrix_market(p)
+
+
+@pytest.mark.robustness
+def test_mm_dedup_sums_duplicates_like_canonical_triplets(tmp_path):
+    from repro.autotune import canonical_triplets
+
+    p = _write(tmp_path, """%%MatrixMarket matrix coordinate real general
+2 3 4
+1 1 1.5
+2 3 2.0
+1 1 -0.5
+2 1 4.0
+""")
+    rows, cols, vals, shape = load_matrix_market(p)
+    assert len(rows) == 3                    # (0,0) merged by summation
+    cr, cc, cv = canonical_triplets(
+        np.array([0, 1, 0, 1]), np.array([0, 2, 0, 0]),
+        np.array([1.5, 2.0, -0.5, 4.0]), shape, val_dtype=np.float64)
+    np.testing.assert_array_equal(rows, cr)
+    np.testing.assert_array_equal(cols, cc)
+    np.testing.assert_allclose(vals, cv)
+
+
+@pytest.mark.robustness
+@pytest.mark.parametrize("body,err", [
+    # truncated mid-entry: final line lost its value column
+    ("2 2 2\n1 1 1.0\n2 2\n", "malformed entry"),
+    # absurd size lines
+    ("0 0 5\n", "absurd"),
+    ("-2 2 1\n1 1 1.0\n", "absurd"),
+    ("2 2 -1\n", "absurd"),
+    ("2 x 3\n", "malformed size line"),
+])
+def test_mm_rejects_truncated_and_absurd(tmp_path, body, err):
+    p = _write(tmp_path,
+               "%%MatrixMarket matrix coordinate real general\n" + body)
+    with pytest.raises(errors.IngestError, match=err) as e:
+        load_matrix_market(p)
+    assert e.value.code == errors.INGEST_INVALID
 
 
 def test_mm_to_cb_spmv_roundtrip(tmp_path):
