@@ -107,6 +107,22 @@ SECTIONS: dict[str, Section] = {
         # the acceptance bar: payload rewrite at <= 1/4 of a full rebuild
         geomean_max=(("t_update", "t_rebuild", 0.25),),
     ),
+    "obs": Section(
+        "Observability: instrumentation overhead + accounting fidelity",
+        "benchmarks.obs_bench",
+        required_keys=(
+            "matrix", "nnz", "t_enabled", "t_disabled", "overhead_ratio",
+            "padded_elems_measured", "padded_elems_predicted",
+            "steps_measured", "steps_predicted", "metrics_present",
+        ),
+        timing_pairs=(("t_enabled", "t_disabled"),),
+        require_true=("metrics_present",),
+        # the acceptance bars: recording costs <= 5% of the kernel path,
+        # and the registry's measured totals stay inside the same 2x
+        # cost-model envelope the autotune section holds predictions to
+        geomean_max=(("t_enabled", "t_disabled", 1.05),
+                     ("padded_elems_measured", "padded_elems_predicted", 2.0)),
+    ),
     "robustness": Section(
         "Fault injection: typed detection + solver fallback recovery",
         "benchmarks.robustness_bench",

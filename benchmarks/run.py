@@ -59,10 +59,16 @@ def main() -> None:
         print(f"[{key} done in {time.time() - t0:.1f}s]", flush=True)
 
     if args.json:
+        # attach the obs registry's view of everything the run recorded
+        # (kernel-launch accounting, plan-cache rates, solver ladders) —
+        # lazy import keeps the standalone guard script jax-free
+        from repro import obs
+
         payload = {
             "schema": "cb-spmv-bench/v1",
             "scale": args.scale,
             "sections": results,
+            "metrics": obs.snapshot(),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)

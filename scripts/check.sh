@@ -21,8 +21,8 @@ python -m benchmarks.run --scale small --only fig34
 echo "== robustness: fault-injection axis (pytest -m robustness) =="
 python -m pytest -q -m robustness
 
-echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic + robustness (--json + regression guard) =="
+echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic + robustness + obs (--json + regression guard) =="
 BENCH_JSON="$(mktemp /tmp/bench_spmv.XXXXXX.json)"
 trap 'rm -f "$BENCH_JSON"' EXIT
-python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic,robustness --json "$BENCH_JSON"
+python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic,robustness,obs --json "$BENCH_JSON"
 python scripts/bench_guard.py "$BENCH_JSON" benchmarks/BENCH_spmv.json

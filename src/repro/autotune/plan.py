@@ -42,7 +42,7 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro import errors
+from repro import errors, obs
 from repro.core import aggregation
 from repro.core.formats import FormatThresholds
 
@@ -297,14 +297,31 @@ class PlanCache:
     shape, wrong nnz, thresholds that no longer resolve — is a *stale*
     miss, counted separately in ``stale`` so fleets can alarm on cache
     poisoning instead of silently re-planning forever.
+
+    Counters live on the obs registry (the process-wide counter
+    ``repro.autotune.plan_cache.lookups`` labeled by outcome); the
+    historical per-instance ``hits`` / ``misses`` / ``stale`` attributes
+    are thin read-only views over a :class:`repro.obs.MirroredCounter`,
+    so existing callers and tests see identical semantics.
     """
 
     def __init__(self, directory):
         self.directory = str(directory)
         os.makedirs(self.directory, exist_ok=True)
-        self.hits = 0
-        self.misses = 0
-        self.stale = 0
+        self._counts = obs.MirroredCounter(
+            metric="repro.autotune.plan_cache.lookups", label="outcome")
+
+    @property
+    def hits(self) -> int:
+        return self._counts["hit"]
+
+    @property
+    def misses(self) -> int:
+        return self._counts["miss"]
+
+    @property
+    def stale(self) -> int:
+        return self._counts["stale"]
 
     def path_for(self, structure_hash: str) -> str:
         return os.path.join(self.directory, f"{structure_hash}.plan.json")
@@ -340,15 +357,15 @@ class PlanCache:
                 )
                 migrated = True
         if plan is None:
-            self.misses += 1
+            self._counts["miss"] += 1
             return None
         if plan.check_valid(shape=shape, nnz=nnz) is not None:
-            self.stale += 1
-            self.misses += 1
+            self._counts["stale"] += 1
+            self._counts["miss"] += 1
             return None
         if migrated:
             self.put(plan)
-        self.hits += 1
+        self._counts["hit"] += 1
         return plan
 
     def put(self, plan: Plan) -> str:

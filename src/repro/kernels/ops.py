@@ -38,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.streams import (
     SUBLANE, SpMVStreams, SuperBlockStreams, SuperTileStream, TileStream,
     even_group, spmm_block_n,
@@ -160,9 +161,153 @@ def _resolve_plan(streams, plan, group_size):
     return plan.group_size
 
 
+# ---------------------------------------------------------------------------
+# Launch accounting (repro.obs): the numbers the cost model predicts,
+# measured from the streams every call actually dispatches.
+# ---------------------------------------------------------------------------
+
+def spmv_launch_stats(
+    streams: SpMVStreams | SuperBlockStreams, group_size: int | None = None
+) -> dict:
+    """Per-format grid steps / padded elements one ``cb_spmv`` call runs.
+
+    Pure shape arithmetic (works on tracers): for a packed
+    ``SuperBlockStreams`` the geometry is read off directly; for a flat
+    ``SpMVStreams`` + ``group_size`` it replicates ``_regroup``'s
+    ``even_group`` padding arithmetic without building anything — tested
+    equal to the actually-regrouped stream. ``launches`` counts the
+    ``pallas_call``s the batched engine issues: one per non-empty format.
+    """
+    B = streams.block_size
+    if isinstance(streams, SuperBlockStreams):
+        G = streams.group_size
+        steps = {"dense": streams.num_dense_groups,
+                 "panel": streams.num_panel_groups,
+                 "coo": streams.num_coo_groups}
+        padded = streams.padded_work()
+    else:
+        G = int(group_size or 1)
+        gd, Gd = even_group(streams.num_dense, G)
+        gp, Gp = even_group(streams.num_panel, G)
+        gc, Gc = even_group(streams.num_coo, G)
+        Kp = streams.panel_vals.shape[2]
+        Ep = streams.coo_codes.shape[1]
+        steps = {"dense": gd, "panel": gp, "coo": gc}
+        padded = {"dense": gd * Gd * B * B, "panel": gp * B * Gp * Kp,
+                  "coo": gc * Gc * Ep}
+    steps = {k: int(v) for k, v in steps.items()}
+    padded = {k: int(v) for k, v in padded.items()}
+    return {
+        "group_size": int(G),
+        "steps": steps,
+        "padded": padded,
+        "launches": {k: int(steps[k] > 0) for k in steps},
+        "steps_total": sum(steps.values()),
+        "padded_total": sum(padded.values()),
+    }
+
+
+def spmm_launch_stats(
+    stream: TileStream | SuperTileStream,
+    group_size: int | None = None,
+    *,
+    n_cols: int | None = None,
+    block_n: int = 128,
+) -> dict:
+    """``cb_spmm``'s analogue of :func:`spmv_launch_stats`.
+
+    ``steps`` is the full grid size ``tile_groups * n_tiles_of_X`` when
+    the activation width is known (``n_cols``), else the weight-stream
+    group count alone.
+    """
+    B = stream.block_size
+    if isinstance(stream, SuperTileStream):
+        G = stream.group_size
+        gt, Gt = stream.num_groups, stream.slots
+    else:
+        G = int(group_size or 1)
+        gt, Gt = even_group(stream.num_tiles, G)
+    padded = int(gt * Gt * B * B)
+    steps = int(gt)
+    if n_cols is not None and gt:
+        bn = spmm_block_n(int(n_cols), block_n)
+        steps = gt * (-(-int(n_cols) // bn))
+    return {
+        "group_size": int(G),
+        "steps": {"tiles": steps},
+        "padded": {"tiles": padded},
+        "launches": {"tiles": int(gt > 0)},
+        "steps_total": steps,
+        "padded_total": padded,
+    }
+
+
+def _record_call(entry: str, stats: dict, impl: str, plan) -> None:
+    """Emit one call's launch accounting to the default registry.
+
+    Runs outside jitted code — under an outer ``jax.jit`` this is a
+    trace-time side effect, so counts are per *logical* invocation.
+    Only the Pallas engine dispatches kernels; reference calls count
+    calls alone.
+    """
+    reg = obs.registry()
+    reg.counter(f"repro.ops.{entry}.calls").inc(impl=impl)
+    if impl != "pallas":
+        return
+    launches = reg.counter(f"repro.ops.{entry}.launches")
+    steps = reg.counter(f"repro.ops.{entry}.steps")
+    padded = reg.counter(f"repro.ops.{entry}.padded_elems")
+    for fmt, n in stats["steps"].items():
+        if n:
+            launches.inc(stats["launches"][fmt], format=fmt)
+            steps.inc(n, format=fmt)
+            padded.inc(stats["padded"][fmt], format=fmt)
+    reg.gauge(f"repro.ops.{entry}.group_size").set(stats["group_size"])
+    if plan is not None and entry in ("spmv", "spmv_into"):
+        # measured-vs-predicted per plan: the raw material for online
+        # calibration of the cost model (ROADMAP) — both sides accumulate
+        # once per call, so their ratio is the per-call fidelity.
+        label = plan.structure_hash[:12]
+        exec_padded = reg.counter("repro.autotune.exec.padded_elems")
+        exec_steps = reg.counter("repro.autotune.exec.steps")
+        reg.counter("repro.autotune.exec.calls").inc(plan=label)
+        exec_padded.inc(stats["padded_total"], plan=label, kind="measured")
+        exec_padded.inc(plan.predicted_padded_elems, plan=label,
+                        kind="predicted")
+        exec_steps.inc(stats["steps_total"], plan=label, kind="measured")
+        exec_steps.inc(plan.predicted_steps, plan=label, kind="predicted")
+
+
 @functools.partial(
     jax.jit, static_argnames=("impl", "interpret", "group_size", "plan")
 )
+def _cb_spmv_jit(
+    streams: SpMVStreams | SuperBlockStreams,
+    x: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    group_size: int | None = None,
+    plan=None,
+) -> jax.Array:
+    group_size = _resolve_plan(streams, plan, group_size)
+    _check_group_size(streams, group_size)
+
+    if impl == "reference":
+        if isinstance(streams, SuperBlockStreams):
+            return ref.super_spmv(streams, x)
+        return ref.cb_spmv(streams, x)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    sup = (streams if isinstance(streams, SuperBlockStreams)
+           else _regroup(streams, group_size or 1))
+    interp = (not _on_tpu()) if interpret is None else interpret
+
+    B, mb = sup.block_size, sup.mb
+    y = _combine_into(jnp.zeros((mb, B), jnp.float32), sup, x, interp)
+    return y.reshape(-1)[: sup.m]
+
+
 def cb_spmv(
     streams: SpMVStreams | SuperBlockStreams,
     x: jax.Array,
@@ -184,23 +329,20 @@ def cb_spmv(
     ``impl="reference"`` stays an *independent* oracle: it consumes the
     stream layout as given (no regrouping), so batched Pallas results are
     always checked against math that never touched the batching code.
+
+    The computation itself is the jitted ``_cb_spmv_jit``; this entry is
+    a host-side shim that additionally records launch accounting
+    (``repro.ops.spmv.*`` — see ``obs/README.md``) after a successful
+    dispatch. Recording reads only static stream geometry, so results
+    are bit-identical with obs enabled or disabled.
     """
-    group_size = _resolve_plan(streams, plan, group_size)
-    _check_group_size(streams, group_size)
-
-    if impl == "reference":
-        if isinstance(streams, SuperBlockStreams):
-            return ref.super_spmv(streams, x)
-        return ref.cb_spmv(streams, x)
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    sup = (streams if isinstance(streams, SuperBlockStreams)
-           else _regroup(streams, group_size or 1))
-    interp = (not _on_tpu()) if interpret is None else interpret
-
-    B, mb = sup.block_size, sup.mb
-    y = _combine_into(jnp.zeros((mb, B), jnp.float32), sup, x, interp)
-    return y.reshape(-1)[: sup.m]
+    y = _cb_spmv_jit(streams, x, impl=impl, interpret=interpret,
+                     group_size=group_size, plan=plan)
+    if obs.is_enabled():
+        g = group_size if group_size is not None else (
+            plan.group_size if plan is not None else None)
+        _record_call("spmv", spmv_launch_stats(streams, g), impl, plan)
+    return y
 
 
 def _check_group_size(streams, group_size) -> None:
@@ -231,6 +373,33 @@ def _combine_into(y2d, sup: SuperBlockStreams, x: jax.Array, interp: bool):
     static_argnames=("impl", "interpret", "group_size", "plan"),
     donate_argnums=(0,),
 )
+def _cb_spmv_into_jit(
+    y_acc: jax.Array,
+    streams: SpMVStreams | SuperBlockStreams,
+    x: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    group_size: int | None = None,
+    plan=None,
+) -> jax.Array:
+    group_size = _resolve_plan(streams, plan, group_size)
+    _check_group_size(streams, group_size)
+    if impl == "reference":
+        return y_acc + _cb_spmv_jit(streams, x, impl="reference")
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    sup = (streams if isinstance(streams, SuperBlockStreams)
+           else _regroup(streams, group_size or 1))
+    interp = (not _on_tpu()) if interpret is None else interpret
+    B, mb = sup.block_size, sup.mb
+    y2d = jnp.pad(
+        y_acc.astype(jnp.float32), (0, mb * B - y_acc.shape[0])
+    ).reshape(mb, B)
+    y2d = _combine_into(y2d, sup, x, interp)
+    return y2d.reshape(-1)[: sup.m]
+
+
 def cb_spmv_into(
     y_acc: jax.Array,
     streams: SpMVStreams | SuperBlockStreams,
@@ -249,22 +418,17 @@ def cb_spmv_into(
     allocating a fresh one per iteration (a no-op where the backend lacks
     donation, e.g. CPU — then this is just fused accumulate-SpMV). The
     caller must not reuse ``y_acc`` after the call, per donation rules.
+
+    Like :func:`cb_spmv`, the host-side shim records launch accounting
+    (``repro.ops.spmv_into.*``) around the jitted computation.
     """
-    group_size = _resolve_plan(streams, plan, group_size)
-    _check_group_size(streams, group_size)
-    if impl == "reference":
-        return y_acc + cb_spmv(streams, x, impl="reference")
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    sup = (streams if isinstance(streams, SuperBlockStreams)
-           else _regroup(streams, group_size or 1))
-    interp = (not _on_tpu()) if interpret is None else interpret
-    B, mb = sup.block_size, sup.mb
-    y2d = jnp.pad(
-        y_acc.astype(jnp.float32), (0, mb * B - y_acc.shape[0])
-    ).reshape(mb, B)
-    y2d = _combine_into(y2d, sup, x, interp)
-    return y2d.reshape(-1)[: sup.m]
+    y = _cb_spmv_into_jit(y_acc, streams, x, impl=impl, interpret=interpret,
+                          group_size=group_size, plan=plan)
+    if obs.is_enabled():
+        g = group_size if group_size is not None else (
+            plan.group_size if plan is not None else None)
+        _record_call("spmv_into", spmv_launch_stats(streams, g), impl, plan)
+    return y
 
 
 def _check_tile_group_size(stream, group_size) -> None:
@@ -302,6 +466,42 @@ def _regroup_tiles(ts: TileStream, G: int) -> SuperTileStream:
     jax.jit,
     static_argnames=("impl", "interpret", "block_n", "group_size", "plan"),
 )
+def _cb_spmm_jit(
+    stream: TileStream | SuperTileStream,
+    X: jax.Array,
+    *,
+    impl: str = "pallas",
+    interpret: bool | None = None,
+    block_n: int = 128,
+    group_size: int | None = None,
+    plan=None,
+) -> jax.Array:
+    group_size = _resolve_plan(stream, plan, group_size)
+    _check_tile_group_size(stream, group_size)
+    if impl == "reference":
+        if isinstance(stream, SuperTileStream):
+            return ref.super_spmm(stream, X)
+        return ref.cb_spmm(stream, X)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    sup = (stream if isinstance(stream, SuperTileStream)
+           else _regroup_tiles(stream, group_size or 1))
+    interp = (not _on_tpu()) if interpret is None else interpret
+
+    B, mb, nb = sup.block_size, sup.mb, sup.nb
+    n, N = X.shape
+    bn = spmm_block_n(N, block_n)
+    Npad = -(-N // bn) * bn
+    Xp = jnp.pad(X, ((0, nb * B - n), (0, Npad - N)))
+    Xb = Xp.reshape(nb, B, Npad)
+    part = _cb_spmm_kernel.super_tile_spmm(
+        sup.tiles, sup.bcol, Xb, block_n=bn, interpret=interp,
+    )                                                  # (gt, Gt, B, Npad)
+    Yb = jnp.zeros((mb, B, Npad), jnp.float32)
+    Yb = Yb.at[sup.brow.reshape(-1)].add(part.reshape(-1, B, Npad))
+    return Yb.reshape(mb * B, Npad)[: sup.m, :N]
+
+
 def cb_spmm(
     stream: TileStream | SuperTileStream,
     X: jax.Array,
@@ -329,28 +529,19 @@ def cb_spmm(
     independent oracle on the layout as given (no regrouping). ``plan``
     (static, an autotune ``Plan``) supplies the planner's group size,
     with the same conflict rules as ``cb_spmv``.
-    """
-    group_size = _resolve_plan(stream, plan, group_size)
-    _check_tile_group_size(stream, group_size)
-    if impl == "reference":
-        if isinstance(stream, SuperTileStream):
-            return ref.super_spmm(stream, X)
-        return ref.cb_spmm(stream, X)
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    sup = (stream if isinstance(stream, SuperTileStream)
-           else _regroup_tiles(stream, group_size or 1))
-    interp = (not _on_tpu()) if interpret is None else interpret
 
-    B, mb, nb = sup.block_size, sup.mb, sup.nb
-    n, N = X.shape
-    bn = spmm_block_n(N, block_n)
-    Npad = -(-N // bn) * bn
-    Xp = jnp.pad(X, ((0, nb * B - n), (0, Npad - N)))
-    Xb = Xp.reshape(nb, B, Npad)
-    part = _cb_spmm_kernel.super_tile_spmm(
-        sup.tiles, sup.bcol, Xb, block_n=bn, interpret=interp,
-    )                                                  # (gt, Gt, B, Npad)
-    Yb = jnp.zeros((mb, B, Npad), jnp.float32)
-    Yb = Yb.at[sup.brow.reshape(-1)].add(part.reshape(-1, B, Npad))
-    return Yb.reshape(mb * B, Npad)[: sup.m, :N]
+    The host-side shim records launch accounting (``repro.ops.spmm.*``)
+    around the jitted computation, mirroring :func:`cb_spmv`.
+    """
+    Y = _cb_spmm_jit(stream, X, impl=impl, interpret=interpret,
+                     block_n=block_n, group_size=group_size, plan=plan)
+    if obs.is_enabled():
+        g = group_size if group_size is not None else (
+            plan.group_size if plan is not None else None)
+        n_cols = int(X.shape[1]) if hasattr(X, "shape") else None
+        _record_call(
+            "spmm",
+            spmm_launch_stats(stream, g, n_cols=n_cols, block_n=block_n),
+            impl, plan,
+        )
+    return Y

@@ -23,10 +23,17 @@ Degradation model (the fault-injection axis): the engine degrades
     raises ``errors.TickError``;
   * **health** — :meth:`health` snapshots the counters so a supervisor
     can alarm on rejection/expiry/retry rates.
+
+Telemetry: every degradation counter also lands on the obs registry
+(``repro.serving.*``, labeled per engine instance), each tick runs under
+an ``obs.span("serving.tick")``, and tick latency / queue depth feed
+deterministic histograms surfaced through :meth:`health` — the inputs a
+supervisor needs for percentile-based alerting, not just totals.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from typing import Optional
@@ -35,10 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import errors
+from repro import errors, obs
 from repro.models.model import Model
 
 from .decode import build_decode_fn
+
+# Distinguishes concurrent engines' series on the process-wide registry.
+_ENGINE_IDS = itertools.count()
 
 
 @dataclasses.dataclass
@@ -82,8 +92,13 @@ class ServingEngine:
         self.rejected = 0
         self.retries = 0
         self.deadline_expired = 0
+        self.backoff_total_s = 0.0
         self.expired: list[Request] = []
         self.last_error: Optional[str] = None
+        self._obs_labels = {"engine": str(next(_ENGINE_IDS))}
+
+    def _count(self, metric: str, value: int = 1) -> None:
+        obs.counter(f"repro.serving.{metric}").inc(value, **self._obs_labels)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> str:
@@ -96,6 +111,7 @@ class ServingEngine:
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             req.status = errors.QUEUE_FULL
             self.rejected += 1
+            self._count("rejected")
             return req.status
         req.status = errors.ACCEPTED
         req.submitted_tick = self.ticks
@@ -125,6 +141,7 @@ class ServingEngine:
     def _expire(self, req: Request) -> None:
         req.status = errors.DEADLINE_EXCEEDED
         self.deadline_expired += 1
+        self._count("deadline_expired")
         self.expired.append(req)
 
     def _expire_deadlines(self) -> None:
@@ -169,12 +186,32 @@ class ServingEngine:
                         f"last: {self.last_error}",
                     )) from e
                 self.retries += 1
+                self._count("retries")
                 if self.retry_backoff_s:
-                    self._sleep(self.retry_backoff_s * (2 ** attempt))
+                    delay = self.retry_backoff_s * (2 ** attempt)
+                    self.backoff_total_s += delay
+                    self._sleep(delay)
 
     # ------------------------------------------------------------------
     def tick(self) -> list[Request]:
         """One decode step for the whole batch. Returns finished requests."""
+        if not obs.is_enabled():
+            return self._tick()
+        with obs.span("serving.tick", tick=self.ticks,
+                      queue_depth=len(self.queue)) as sp:
+            t0 = obs.now()
+            finished = self._tick()
+            obs.histogram("repro.serving.tick_latency_s").observe(
+                obs.now() - t0, **self._obs_labels)
+            obs.histogram("repro.serving.queue_depth").observe(
+                len(self.queue), **self._obs_labels)
+            self._count("ticks")
+            if finished:
+                self._count("completed", len(finished))
+            sp.set(finished=len(finished))
+        return finished
+
+    def _tick(self) -> list[Request]:
         self._expire_deadlines()
         self._admit()
         tokens = np.zeros((self.slots,), np.int32)
@@ -218,7 +255,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def health(self) -> dict:
-        """Counter snapshot for supervisors (cheap, host-only)."""
+        """Counter snapshot for supervisors (cheap, host-only).
+
+        Totals are cumulative over the engine's lifetime — ``retries``
+        counts every retried step and ``backoff_total_s`` the summed
+        backoff sleep, so a supervisor can alarm on *rates* between two
+        snapshots. ``tick_latency_s`` / ``queue_depth_hist`` are
+        histogram summaries (count/sum/min/max/p50/p99 from the obs
+        registry); their counts stay 0 while obs is disabled.
+        """
+        lat = obs.histogram("repro.serving.tick_latency_s").summary(
+            **self._obs_labels)
+        depth = obs.histogram("repro.serving.queue_depth").summary(
+            **self._obs_labels)
         return {
             "ticks": self.ticks,
             "queue_depth": len(self.queue),
@@ -226,6 +275,10 @@ class ServingEngine:
             "completed": self.completed,
             "rejected": self.rejected,
             "retries": self.retries,
+            "backoff_total_s": self.backoff_total_s,
             "deadline_expired": self.deadline_expired,
+            "deadline_miss_count": self.deadline_expired,
+            "tick_latency_s": lat,
+            "queue_depth_hist": depth,
             "last_error": self.last_error,
         }

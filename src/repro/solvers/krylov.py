@@ -41,7 +41,6 @@ solvers with identical static arguments.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 import math
@@ -50,7 +49,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro import errors
+from repro import errors, obs
 from repro.errors import SolverStatus
 
 from .operator import CBLinearOperator
@@ -58,7 +57,10 @@ from .operator import CBLinearOperator
 # name -> number of times the solver (or its loop body) has been TRACED.
 # Python side effects only run while tracing, so a cache hit leaves these
 # untouched — the no-per-iteration-recompilation proof used by the tests.
-_TRACE_COUNTS: collections.Counter = collections.Counter()
+# A MirroredCounter: the local dict keeps the historical API while every
+# increment also lands on the registry counter ``repro.solvers.traces``.
+_TRACE_COUNTS = obs.MirroredCounter(
+    metric="repro.solvers.traces", label="site")
 
 _OK = jnp.int32(SolverStatus.OK)
 _MAXITER = jnp.int32(SolverStatus.MAXITER)
@@ -542,44 +544,71 @@ def robust_solve(
     gmres_cycles = max(1, math.ceil(maxiter / restart))
     common = dict(tol=tol, impl=impl, interpret=interpret, divtol=divtol)
 
+    # Attempt-ladder telemetry (repro.solvers.robust.*): each attempt is
+    # one span + one labeled counter bump, so a fleet can alarm on
+    # fallback rates without scraping Attempt tuples.
+    reg = obs.registry()
+    reg.counter("repro.solvers.robust.calls").inc()
+    if sanitized:
+        reg.counter("repro.solvers.robust.sanitized_x0").inc()
+
     attempts: list[Attempt] = []
     best_x, best_rnorm = x0, float("inf")
     best_attempt: tuple[str, SolveResult] | None = None
     res = None
     name = methods[0]
-    for name, Mi, escalated in ladder:
-        solver = _CHAIN_SOLVERS[name]
-        if name == "gmres":
-            res = solver(A, b, Mi, x0=best_x, maxiter=gmres_cycles,
-                         restart=restart, **common)
-        else:
-            res = solver(A, b, Mi, x0=best_x, maxiter=maxiter,
-                         stall_limit=stall_limit, **common)
-        status = int(res.status)
-        rnorm = float(res.residual)
-        attempts.append(Attempt(
-            solver=name, preconditioned=Mi is not None, status=status,
-            reason=errors.solver_reason(status),
-            converged=bool(res.converged),
-            iterations=int(res.iterations), residual=rnorm,
-        ))
-        if math.isfinite(rnorm) and rnorm < best_rnorm:
-            best_rnorm, best_x = rnorm, res.x
-            best_attempt = (name, res)
-        if status == SolverStatus.OK:
-            return RobustSolveResult(
-                x=res.x, converged=True, status=SolverStatus.OK,
-                reason=errors.solver_reason(SolverStatus.OK), solver=name,
-                residual=rnorm, attempts=tuple(attempts), result=res,
-                sanitized_x0=sanitized,
-            )
+    with obs.span("robust_solve", n=int(b.shape[0]),
+                  methods=",".join(methods)) as root:
+        for name, Mi, escalated in ladder:
+            solver = _CHAIN_SOLVERS[name]
+            with obs.span(f"solve:{name}", solver=name,
+                          preconditioned=Mi is not None,
+                          escalated=escalated) as sp:
+                if name == "gmres":
+                    res = solver(A, b, Mi, x0=best_x, maxiter=gmres_cycles,
+                                 restart=restart, **common)
+                else:
+                    res = solver(A, b, Mi, x0=best_x, maxiter=maxiter,
+                                 stall_limit=stall_limit, **common)
+                status = int(res.status)
+                rnorm = float(res.residual)
+                sp.set(status=errors.solver_reason(status),
+                       iterations=int(res.iterations))
+            attempts.append(Attempt(
+                solver=name, preconditioned=Mi is not None, status=status,
+                reason=errors.solver_reason(status),
+                converged=bool(res.converged),
+                iterations=int(res.iterations), residual=rnorm,
+            ))
+            reg.counter("repro.solvers.robust.attempts").inc(
+                solver=name, reason=errors.solver_reason(status))
+            reg.counter("repro.solvers.robust.iterations").inc(
+                int(res.iterations), solver=name)
+            if math.isfinite(rnorm) and rnorm < best_rnorm:
+                best_rnorm, best_x = rnorm, res.x
+                best_attempt = (name, res)
+            if status == SolverStatus.OK:
+                root.set(outcome="converged", solver=name,
+                         attempts=len(attempts))
+                reg.counter("repro.solvers.robust.outcome").inc(
+                    outcome="converged", solver=name)
+                return RobustSolveResult(
+                    x=res.x, converged=True, status=SolverStatus.OK,
+                    reason=errors.solver_reason(SolverStatus.OK), solver=name,
+                    residual=rnorm, attempts=tuple(attempts), result=res,
+                    sanitized_x0=sanitized,
+                )
 
-    # chain exhausted: surface the best iterate with a typed verdict
-    final_name, final_res = best_attempt if best_attempt else (name, res)
-    status = int(attempts[-1].status)
-    return RobustSolveResult(
-        x=final_res.x, converged=False, status=status,
-        reason=errors.solver_reason(status), solver=final_name,
-        residual=float(final_res.residual), attempts=tuple(attempts),
-        result=final_res, sanitized_x0=sanitized,
-    )
+        # chain exhausted: surface the best iterate with a typed verdict
+        final_name, final_res = best_attempt if best_attempt else (name, res)
+        status = int(attempts[-1].status)
+        root.set(outcome="exhausted", solver=final_name,
+                 attempts=len(attempts))
+        reg.counter("repro.solvers.robust.outcome").inc(
+            outcome="exhausted", solver=final_name)
+        return RobustSolveResult(
+            x=final_res.x, converged=False, status=status,
+            reason=errors.solver_reason(status), solver=final_name,
+            residual=float(final_res.residual), attempts=tuple(attempts),
+            result=final_res, sanitized_x0=sanitized,
+        )

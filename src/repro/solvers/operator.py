@@ -193,15 +193,21 @@ class CBLinearOperator:
 
     def matvec(self, x: jax.Array, *, impl: str = "pallas",
                interpret: bool | None = None) -> jax.Array:
-        """``A @ x`` — x: (n,) -> (m,)."""
-        return ops.cb_spmv(self.streams, x, impl=impl, interpret=interpret)
+        """``A @ x`` — x: (n,) -> (m,).
+
+        Passing ``plan`` lets obs log measured-vs-predicted launch stats
+        per plan structure hash; it's static metadata already baked into
+        this operator, so jit sees nothing new.
+        """
+        return ops.cb_spmv(self.streams, x, impl=impl, interpret=interpret,
+                           plan=self.plan)
 
     def matvec_into(self, y_acc: jax.Array, x: jax.Array, *,
                     impl: str = "pallas",
                     interpret: bool | None = None) -> jax.Array:
         """``y_acc + A @ x`` with the accumulator donated (ops.cb_spmv_into)."""
         return ops.cb_spmv_into(y_acc, self.streams, x, impl=impl,
-                                interpret=interpret)
+                                interpret=interpret, plan=self.plan)
 
     def rmatvec(self, y: jax.Array, *, impl: str = "pallas",
                 interpret: bool | None = None) -> jax.Array:
