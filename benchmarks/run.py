@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from .registry import SECTIONS, runner
@@ -62,7 +63,17 @@ def main() -> None:
         # attach the obs registry's view of everything the run recorded
         # (kernel-launch accounting, plan-cache rates, solver ladders) —
         # lazy import keeps the standalone guard script jax-free
-        from repro import obs
+        from repro import analysis, obs
+
+        # lint health rides the same snapshot: repro.analysis.findings
+        # gauges (per rule + total) so the JSON artifact records whether
+        # the tree was invariant-clean when the numbers were taken.
+        if os.path.isdir(os.path.join("src", "repro")):
+            analysis.lint_paths(
+                [os.path.join("src", "repro")],
+                baseline_path=analysis.DEFAULT_BASELINE,
+                record_obs=True,
+            )
 
         payload = {
             "schema": "cb-spmv-bench/v1",

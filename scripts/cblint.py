@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""cblint CLI — run the repo-invariant static analysis.
+
+    python scripts/cblint.py [PATH ...]          # default: src/repro
+    python scripts/cblint.py --json              # machine-readable report
+    python scripts/cblint.py --changed           # only git-modified files
+    python scripts/cblint.py --update-baseline   # grandfather current hits
+
+Exit status: 0 clean, 1 findings, 2 bad invocation. Human output is one
+``path:line:col: CBxxx message  [fix: hint]`` line per finding; the
+``--json`` report is byte-deterministic (sorted findings, no
+timestamps). Rule catalog: ``src/repro/analysis/README.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Standalone-invocable: `python scripts/cblint.py` works without an
+# exported PYTHONPATH (check.sh exports it; a bare shell may not).
+_SRC = os.path.join(_REPO_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro import analysis  # noqa: E402
+
+
+def _changed_files(paths: list[str]) -> list[str]:
+    """git-modified + untracked .py files under ``paths``."""
+    def git(*args: str) -> list[str]:
+        out = subprocess.run(
+            ["git", *args], cwd=_REPO_ROOT, check=True,
+            capture_output=True, text=True,
+        ).stdout
+        return [line for line in out.splitlines() if line.strip()]
+
+    candidates = set(git("diff", "--name-only", "HEAD"))
+    candidates.update(git("ls-files", "--others", "--exclude-standard"))
+    roots = [os.path.normpath(p) for p in paths]
+    chosen = []
+    for rel in sorted(candidates):
+        if not rel.endswith(".py"):
+            continue
+        norm = os.path.normpath(rel)
+        if any(norm == r or norm.startswith(r + os.sep) for r in roots):
+            full = os.path.join(_REPO_ROOT, rel)
+            if os.path.exists(full):
+                chosen.append(full)
+    return chosen
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="cblint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the deterministic JSON report")
+    ap.add_argument("--changed", action="store_true",
+                    help="lint only git-modified/untracked files under "
+                         "the given paths")
+    ap.add_argument("--baseline", default=analysis.DEFAULT_BASELINE,
+                    metavar="PATH",
+                    help="baseline JSON (default: the checked-in one); "
+                         "'none' disables")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to excuse every current "
+                         "finding, then exit 0")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="skip publishing counts to the obs registry")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [os.path.join(_REPO_ROOT, "src", "repro")]
+    if args.changed:
+        paths = _changed_files(paths)
+        if not paths:
+            if not args.json:
+                print("cblint: no changed python files")
+            return 0
+
+    baseline = None if args.baseline == "none" else args.baseline
+    if args.update_baseline:
+        result = analysis.lint_paths(paths, root=_REPO_ROOT,
+                                     baseline_path=None)
+        target = baseline or analysis.DEFAULT_BASELINE
+        analysis.save_baseline(target, result.findings)
+        print(f"cblint: baselined {len(result.findings)} finding(s) "
+              f"-> {os.path.relpath(target, _REPO_ROOT)}")
+        return 0
+
+    result = analysis.lint_paths(paths, root=_REPO_ROOT,
+                                 baseline_path=baseline,
+                                 record_obs=not args.no_obs)
+
+    if args.json:
+        print(result.to_json())
+    else:
+        for finding in result.findings:
+            print(finding.format())
+        tail = (f"cblint: {len(result.findings)} finding(s) in "
+                f"{result.files} file(s)")
+        if result.suppressed:
+            tail += f", {result.suppressed} suppressed"
+        if result.baseline_used:
+            tail += f", {sum(e['count'] for e in result.baseline_used)} " \
+                    "baselined"
+        print(tail)
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,9 @@ fi
 echo "== tier-1: pytest ${PYTEST_ARGS[*]} =="
 python -m pytest "${PYTEST_ARGS[@]}"
 
+echo "== cblint: repo-invariant static analysis (src/repro) =="
+python scripts/cblint.py src/repro
+
 echo "== benchmark smoke: fig34 (distribution + balance) =="
 python -m benchmarks.run --scale small --only fig34
 

@@ -1,0 +1,51 @@
+"""cblint — repo-invariant static analysis for the CB-SpMV tree.
+
+Zero third-party dependencies (stdlib ``ast`` only; the optional obs
+hook uses the stdlib-only ``repro.obs``). The rule set encodes the
+invariants earlier PRs established by convention:
+
+  ======  ====================  =========================================
+  code    name                  invariant
+  ======  ====================  =========================================
+  CB001   useless-suppression   pragmas must name a rule that fires
+  CB002   parse-error           every linted file must parse
+  CB101   compat-compiler-...   pltpu CompilerParams only in compat.py
+  CB102   compat-pallas-call    pl.pallas_call only in compat.py
+  CB103   compat-shard-map      jax shard_map only in compat.py
+  CB104   compat-axis-types     axis_types= only in compat.py
+  CB201   trace-side-effect     obs/print/RNG/clock outside jitted code
+  CB202   trace-host-sync       no .item()/float(tracer) under tracing
+  CB203   static-unhashable     jit statics must be hashable
+  CB301   magic-block-n         block_n spelled via streams.LANE
+  CB302   kernel-magic-literal  %128 / %8 arithmetic via LANE/SUBLANE
+  CB401   bare-builtin-raise    library raises use repro.errors types
+  CB501   metric-name           instruments named repro.<subsys>.<name>
+  ======  ====================  =========================================
+
+Entry points: ``scripts/cblint.py`` (CLI), ``tests/test_lint.py``
+(pytest gate, ``lint`` marker), and ``lint_paths`` for embedding (the
+bench driver records lint health onto the obs registry through it).
+Full catalog with examples: ``src/repro/analysis/README.md``.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.baseline import (  # noqa: F401
+    load_baseline,
+    save_baseline,
+    subtract_baseline,
+)
+from repro.analysis.engine import (  # noqa: F401
+    SCHEMA,
+    LintResult,
+    iter_python_files,
+    lint_file,
+    lint_paths,
+    record_lint_health,
+)
+from repro.analysis.findings import Finding  # noqa: F401
+from repro.analysis.registry import all_rules, known_codes  # noqa: F401
+
+#: The checked-in baseline the repo gate runs against (empty by policy).
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")

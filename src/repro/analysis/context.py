@@ -1,0 +1,247 @@
+"""Per-file analysis context: parsed AST plus cached scope maps.
+
+``FileContext`` is what every rule checker receives. It owns the parse
+(one ``ast.parse`` per file) and lazily computes the semantic maps
+several rules share:
+
+  * :meth:`jit_scopes` — function bodies that execute **under JAX
+    tracing**: ``_*_jit`` entries (the PR 8 naming contract), functions
+    decorated with ``jax.jit`` / ``functools.partial(jax.jit, ...)``,
+    and Pallas kernel bodies (``*_kernel`` names or functions passed as
+    the kernel argument of ``pallas_call_tpu`` / ``pl.pallas_call``).
+    Trace-safety rules (CB2xx) scan only these subtrees, so host-side
+    CLI ``print``\\ s and ``obs`` calls never false-positive.
+  * :meth:`jit_wrappers` — name -> (static_argnames, static_argnums)
+    for jit-wrapped callables defined in the module, used to validate
+    call-site static arguments (CB203).
+
+Also home to the small AST helpers (``dotted_name``, ``root_name``)
+rules use to match ``pltpu.CompilerParams``-style attribute chains
+without each reimplementing the descent.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+from typing import Iterator
+
+from repro.analysis.suppress import Suppression, parse_suppressions
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a pure Name/Attribute chain, else ``None``."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """Base ``Name`` id of an attribute/call chain.
+
+    Descends through both attribute access and calls, so
+    ``obs.registry().counter("x")`` roots at ``obs`` — which is how the
+    trace-safety rule catches registry lookups spelled either way.
+    """
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            return node.id
+        else:
+            return None
+
+
+def str_constants(node: ast.AST) -> tuple[str, ...]:
+    """String constants inside a tuple/list/set literal (or one string)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return tuple(
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        )
+    return ()
+
+
+def int_constants(node: ast.AST) -> tuple[int, ...]:
+    """Int constants inside a tuple/list literal (or one bare int)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(
+            e.value for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        )
+    return ()
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def _partial_jit_call(node: ast.AST) -> ast.Call | None:
+    """Return the Call if ``node`` is ``[functools.]partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    if dotted_name(node.func) not in ("functools.partial", "partial"):
+        return None
+    if node.args and _is_jax_jit(node.args[0]):
+        return node
+    return None
+
+
+def _jit_call(node: ast.AST) -> ast.Call | None:
+    """Return the Call if ``node`` is ``jax.jit(f, ...)``."""
+    if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+        return node
+    return None
+
+
+def _static_args(call: ast.Call | None) -> tuple[frozenset[str], frozenset[int]]:
+    names: frozenset[str] = frozenset()
+    nums: frozenset[int] = frozenset()
+    if call is not None:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names = frozenset(str_constants(kw.value))
+            elif kw.arg == "static_argnums":
+                nums = frozenset(int_constants(kw.value))
+    return names, nums
+
+
+# ---------------------------------------------------------------------------
+# Scope records
+# ---------------------------------------------------------------------------
+
+JIT_ENTRY = "jit-entry"
+KERNEL_BODY = "kernel-body"
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceScope:
+    """One function whose body runs under tracing (or inside a kernel)."""
+
+    node: ast.FunctionDef
+    kind: str  # JIT_ENTRY | KERNEL_BODY
+    static_names: frozenset[str]
+
+    def walk(self) -> Iterator[ast.AST]:
+        """Every node in the body (the def's own decorators excluded)."""
+        for stmt in self.node.body:
+            yield from ast.walk(stmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class JitWrapper:
+    """A jit-wrapped callable reachable by name within the module."""
+
+    name: str
+    static_names: frozenset[str]
+    static_nums: frozenset[int]
+    line: int
+
+
+# ---------------------------------------------------------------------------
+# FileContext
+# ---------------------------------------------------------------------------
+
+
+class FileContext:
+    """Everything a rule needs to lint one file."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path          # repo-relative, POSIX separators
+        self.source = source
+        self.tree = tree
+        self.suppressions: tuple[Suppression, ...] = parse_suppressions(source)
+
+    # -- generic traversal ------------------------------------------------
+
+    def walk(self) -> Iterator[ast.AST]:
+        return ast.walk(self.tree)
+
+    def functions(self) -> Iterator[ast.FunctionDef]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    # -- trace-scope classification --------------------------------------
+
+    @functools.cached_property
+    def _kernel_arg_names(self) -> frozenset[str]:
+        """Names passed as the kernel (first) argument of a pallas call."""
+        names = set()
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee is None:
+                continue
+            last = callee.rsplit(".", 1)[-1]
+            if last in ("pallas_call_tpu", "pallas_call") and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Name):
+                    names.add(first.id)
+        return frozenset(names)
+
+    @functools.cached_property
+    def trace_scopes(self) -> tuple[TraceScope, ...]:
+        scopes = []
+        for fn in self.functions():
+            kind = None
+            static_names: frozenset[str] = frozenset()
+            for deco in fn.decorator_list:
+                call = _partial_jit_call(deco)
+                if call is not None or _is_jax_jit(deco) or _jit_call(deco):
+                    kind = JIT_ENTRY
+                    static_names, _ = _static_args(call or _jit_call(deco))
+                    break
+            if kind is None and fn.name.startswith("_") and \
+                    fn.name.endswith("_jit"):
+                kind = JIT_ENTRY
+            if kind is None and (fn.name.endswith("_kernel")
+                                 or fn.name in self._kernel_arg_names):
+                kind = KERNEL_BODY
+            if kind is not None:
+                scopes.append(TraceScope(node=fn, kind=kind,
+                                         static_names=static_names))
+        return tuple(scopes)
+
+    # -- jit wrappers (for call-site static-arg validation) ---------------
+
+    @functools.cached_property
+    def jit_wrappers(self) -> dict[str, JitWrapper]:
+        wrappers: dict[str, JitWrapper] = {}
+
+        def add(name: str, call: ast.Call | None, line: int) -> None:
+            names, nums = _static_args(call)
+            if names or nums:
+                wrappers[name] = JitWrapper(name=name, static_names=names,
+                                            static_nums=nums, line=line)
+
+        for node in ast.walk(self.tree):
+            # f_jit = jax.jit(f, static_arg...=...)
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                call = _jit_call(node.value)
+                if call is not None:
+                    add(node.targets[0].id, call, node.lineno)
+            # @functools.partial(jax.jit, static_arg...=...) / @jax.jit(...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    call = _partial_jit_call(deco) or _jit_call(deco)
+                    if call is not None:
+                        add(node.name, call, node.lineno)
+        return wrappers

@@ -1,0 +1,12 @@
+"""Rule modules — importing this package registers every checker.
+
+One module per invariant family; the stable code blocks are assigned in
+``registry.py``'s docstring and cataloged in ``analysis/README.md``.
+"""
+from repro.analysis.rules import (  # noqa: F401
+    align,
+    compat_only,
+    errtax,
+    metric_names,
+    trace_safety,
+)

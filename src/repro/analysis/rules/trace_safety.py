@@ -1,0 +1,157 @@
+"""CB2xx — trace safety (the PR 8 "instrumentation outside jit" contract).
+
+Obs recording, printing, host RNG, and wall-clock reads are Python-level
+side effects: inside a jitted entry (``_*_jit``, ``@jax.jit``) or a
+Pallas kernel body they fire once per *trace*, not per call — silently
+wrong accounting at best, a retrace-dependent heisenbug at worst.
+Likewise ``.item()`` / ``float()`` on a traced array is a concrete
+error under jit, and a dict/list passed for a static argument defeats
+the jit cache with an unhashable-static TypeError.
+
+Scope is computed by :meth:`FileContext.trace_scopes` — only function
+bodies that actually run under tracing are scanned, so host-side CLI
+``print``\\ s and the deliberate trace-*time* counters in the solver
+builders (which are not jit entries themselves) never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.context import FileContext, dotted_name, root_name
+from repro.analysis.findings import Finding
+from repro.analysis.registry import rule
+
+# Call chains that are host-side side effects or nondeterminism sources.
+_HOST_RNG_PREFIXES = ("np.random.", "numpy.random.", "random.", "secrets.")
+_CLOCK_CALLS = (
+    "time.time", "time.perf_counter", "time.monotonic", "time.sleep",
+    "datetime.now", "datetime.datetime.now", "datetime.utcnow",
+)
+
+_MUTABLE_LITERALS = (
+    ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp,
+    ast.GeneratorExp,
+)
+
+
+def _at(ctx: FileContext, node: ast.AST, code: str, message: str,
+        hint: str) -> Finding:
+    return Finding(path=ctx.path, line=node.lineno, col=node.col_offset + 1,
+                   code=code, message=message, hint=hint)
+
+
+def _traced_params(scope) -> frozenset[str]:
+    """Parameter names that hold tracers (everything not jit-static)."""
+    a = scope.node.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    return frozenset(names) - scope.static_names
+
+
+@rule("CB201", "trace-side-effect",
+      "obs/print/host-RNG/clock calls must stay outside jitted code")
+def check_trace_side_effects(ctx: FileContext) -> Iterator[Finding]:
+    for scope in ctx.trace_scopes:
+        where = f"{scope.kind} {scope.node.name!r}"
+        for node in scope.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Name) and node.func.id == "print":
+                yield _at(ctx, node, "CB201",
+                          f"print() inside {where}",
+                          "log from the host-side shim, not traced code")
+                continue
+            if root_name(node.func) == "obs":
+                yield _at(ctx, node, "CB201",
+                          f"obs call inside {where}",
+                          "record metrics/spans in the host-side shim "
+                          "(see kernels/ops.py pattern)")
+                continue
+            callee = dotted_name(node.func)
+            if callee is None:
+                continue
+            if callee.startswith(_HOST_RNG_PREFIXES):
+                yield _at(ctx, node, "CB201",
+                          f"host RNG {callee} inside {where}",
+                          "thread jax.random keys through the trace")
+            elif callee in _CLOCK_CALLS:
+                yield _at(ctx, node, "CB201",
+                          f"wall-clock read {callee} inside {where}",
+                          "time at the host call site; traces must be "
+                          "value-deterministic")
+
+
+@rule("CB202", "trace-host-sync",
+      ".item()/float() on a tracer breaks (or silently constant-folds) jit")
+def check_host_sync(ctx: FileContext) -> Iterator[Finding]:
+    for scope in ctx.trace_scopes:
+        where = f"{scope.kind} {scope.node.name!r}"
+        traced = _traced_params(scope)
+        for node in scope.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield _at(ctx, node, "CB202",
+                          f".item() inside {where}",
+                          "return the array; materialize on the host side")
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in ("float", "int", "bool") and \
+                    len(node.args) == 1 and \
+                    isinstance(node.args[0], ast.Name) and \
+                    node.args[0].id in traced:
+                yield _at(ctx, node, "CB202",
+                          f"{node.func.id}() on traced argument "
+                          f"{node.args[0].id!r} inside {where}",
+                          "keep it an array, or declare the argument "
+                          "static")
+
+
+@rule("CB203", "static-unhashable",
+      "dict/list values for static_argnums/static_argnames are unhashable")
+def check_static_unhashable(ctx: FileContext) -> Iterator[Finding]:
+    # (a) call sites of same-module jit wrappers passing mutable literals
+    # in static slots;
+    wrappers = ctx.jit_wrappers
+    for node in ctx.walk():
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Name) and
+                node.func.id in wrappers):
+            continue
+        w = wrappers[node.func.id]
+        for kw in node.keywords:
+            if kw.arg in w.static_names and \
+                    isinstance(kw.value, _MUTABLE_LITERALS):
+                yield _at(ctx, node, "CB203",
+                          f"unhashable literal for static argument "
+                          f"{kw.arg!r} of {w.name}",
+                          "pass a tuple / frozen value; statics must hash")
+        for i, arg in enumerate(node.args):
+            if i in w.static_nums and isinstance(arg, _MUTABLE_LITERALS):
+                yield _at(ctx, node, "CB203",
+                          f"unhashable literal in static position {i} "
+                          f"of {w.name}",
+                          "pass a tuple / frozen value; statics must hash")
+    # (b) a jit entry whose static-named parameter defaults to a mutable
+    # literal — the default is what most call sites will hit.
+    for scope in ctx.trace_scopes:
+        if not scope.static_names:
+            continue
+        a = scope.node.args
+        pos = [*a.posonlyargs, *a.args]
+        for p, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+            if p.arg in scope.static_names and \
+                    isinstance(default, _MUTABLE_LITERALS):
+                yield _at(ctx, default, "CB203",
+                          f"static parameter {p.arg!r} of "
+                          f"{scope.node.name} defaults to an unhashable "
+                          "literal",
+                          "default to None or a tuple")
+        for p, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None and p.arg in scope.static_names and \
+                    isinstance(default, _MUTABLE_LITERALS):
+                yield _at(ctx, default, "CB203",
+                          f"static parameter {p.arg!r} of "
+                          f"{scope.node.name} defaults to an unhashable "
+                          "literal",
+                          "default to None or a tuple")

@@ -262,7 +262,7 @@ class Plan:
             d.setdefault("value_hash", None)
             d.setdefault("payload_checksum", None)
         elif schema != PLAN_SCHEMA:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"plan schema {schema!r} is neither {PLAN_SCHEMA!r} nor "
                 f"{PLAN_SCHEMA_V1!r}"
             )

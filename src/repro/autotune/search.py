@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.cb_matrix import CBMatrix
 from repro.core.streams import build_super_streams
+from repro import errors
 
 from . import timing
 from .cost import (
@@ -73,7 +74,7 @@ def resolve_mode(mode: str) -> str:
     if mode in ("heuristic", "timed"):
         return mode
     if mode != "auto":
-        raise ValueError(f"unknown search mode {mode!r}")
+        raise errors.InvalidArgError(f"unknown search mode {mode!r}")
     import jax
 
     return "timed" if jax.default_backend() == "tpu" else "heuristic"

@@ -27,6 +27,7 @@ from typing import Any, Callable, Sequence
 import jax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro import errors
 
 # ---------------------------------------------------------------------------
 # Pallas compiler params
@@ -85,7 +86,7 @@ def pallas_call_tpu(
     )
     if grid_spec is not None:
         if grid is not None or in_specs is not None or out_specs is not None:
-            raise ValueError("pass either grid_spec or grid/in_specs/out_specs")
+            raise errors.InvalidArgError("pass either grid_spec or grid/in_specs/out_specs")
         call_kwargs["grid_spec"] = grid_spec
     else:
         for key, value in (("grid", grid), ("in_specs", in_specs),

@@ -23,6 +23,7 @@ import dataclasses
 import numpy as np
 
 from .formats import FMT_COO, FMT_CSR, FMT_DENSE
+from repro import errors
 
 
 def coord_bits(block_size: int) -> int:
@@ -36,7 +37,7 @@ def coord_dtype(block_size: int) -> np.dtype:
         return np.dtype(np.uint8)
     if 2 * bits <= 16:
         return np.dtype(np.uint16)
-    raise ValueError(f"block_size {block_size} too large for packed coordinates")
+    raise errors.InvalidArgError(f"block_size {block_size} too large for packed coordinates")
 
 
 def encode_coords(local_rows: np.ndarray, local_cols: np.ndarray, block_size: int) -> np.ndarray:
@@ -94,7 +95,7 @@ def pack_block(
         head = np.concatenate([row_ptr.view(np.uint8), cols.view(np.uint8)])
         pad = (-len(head)) % vsize
         return np.concatenate([head, np.zeros(pad, np.uint8), val.view(np.uint8)])
-    raise ValueError(f"unknown format {fmt}")
+    raise errors.InvalidArgError(f"unknown format {fmt}")
 
 
 def unpack_block(
@@ -134,7 +135,7 @@ def unpack_block(
         vals = buf[voff : voff + nnz * vsize].view(val_dtype)
         rows = np.repeat(np.arange(B, dtype=np.int32), np.diff(row_ptr))
         return rows, cols, vals
-    raise ValueError(f"unknown format {fmt}")
+    raise errors.InvalidArgError(f"unknown format {fmt}")
 
 
 @dataclasses.dataclass

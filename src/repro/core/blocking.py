@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+from repro import errors
 
 
 @dataclasses.dataclass
@@ -67,7 +68,7 @@ def partition_coo(
     vals = np.asarray(vals)
     if rows.size:
         if rows.min() < 0 or rows.max() >= m or cols.min() < 0 or cols.max() >= n:
-            raise ValueError("coordinate out of bounds")
+            raise errors.InvalidArgError("coordinate out of bounds")
 
     B = int(block_size)
     nbc = -(-n // B)  # ceil

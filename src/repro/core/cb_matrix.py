@@ -48,7 +48,7 @@ def _nonfinite_policy(vals: np.ndarray, policy: str, where: str) -> np.ndarray:
         )
     if policy == "sanitize":
         return np.where(finite, vals, vals.dtype.type(0))
-    raise ValueError(
+    raise errors.InvalidArgError(
         f"unknown nonfinite policy {policy!r}; "
         "expected 'raise', 'sanitize' or 'allow'"
     )
@@ -614,7 +614,7 @@ class CBMatrix:
         vals = np.ascontiguousarray(new_vals, self.val_dtype)
         vals = _nonfinite_policy(vals, nonfinite, "CBMatrix.update_values")
         if vals.shape != (layout.count,):
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"update_values expects {layout.count} canonical values "
                 f"(see to_coo), got array of shape {vals.shape}"
             )

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import errors
+
 from . import balance
 from .cb_matrix import CBMatrix
 from .streams import SpMVStreams, build_streams
@@ -150,7 +152,7 @@ def distributed_spmv(
     from repro.kernels import ops
 
     if combine not in ("psum", "psum_scatter"):
-        raise ValueError(f"unknown combine {combine!r}")
+        raise errors.InvalidArgError(f"unknown combine {combine!r}")
     dev_spec = jax.tree_util.tree_map(lambda _: P(axis), sharded.streams)
     m = sharded.streams.m
     D = sharded.num_devices

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+from repro import errors
 
 # Format codes stored in ``type_per_blk`` (uint8).
 FMT_COO = 0
@@ -39,17 +40,17 @@ class FormatThresholds:
         th1 = self.th1 if self.th1 is not None else max(1, area // 8)
         th2 = self.th2 if self.th2 is not None else max(th1, area // 2)
         if th1 < 1:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"th1 must be >= 1 (a block always holds at least one "
                 f"element), got th1={th1} for B={block_size}"
             )
         if th2 < th1:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"th2 must be >= th1 (the CSR band cannot be negative), "
                 f"got th1={th1} > th2={th2} for B={block_size}"
             )
         if th2 > area:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"th2 must be <= B*B={area} (no block holds more than its "
                 f"area), got th2={th2} for B={block_size}"
             )

@@ -54,6 +54,7 @@ from . import column_agg as column_agg_mod
 from .aggregation import coord_bits
 from .cb_matrix import CBMatrix
 from .formats import FMT_COO, FMT_CSR, FMT_DENSE
+from repro import errors
 
 # ---------------------------------------------------------------------------
 # Padding policy — the single place payload widths get aligned.
@@ -88,7 +89,7 @@ def spmm_block_n(n_cols: int, block_n: int = LANE) -> int:
     activation matrix to ``ceil(N / bn) * bn`` columns.
     """
     if block_n % LANE:
-        raise ValueError(
+        raise errors.InvalidArgError(
             f"block_n must be a multiple of {LANE} lanes, got {block_n}"
         )
     return min(block_n, pad_width(max(int(n_cols), 1), LANE))
@@ -245,7 +246,7 @@ def _collect_blocks(cb: CBMatrix):
             xidx = cb.global_x_index(brow, bcol, c).astype(np.int32)
             coos.append((brow, codes.astype(np.int32), v.astype(vdt), xidx))
         else:  # pragma: no cover - format codes are exhaustive
-            raise ValueError(f"unknown format {fmt}")
+            raise errors.InvalidArgError(f"unknown format {fmt}")
     return dense, panels, coos
 
 
@@ -412,7 +413,7 @@ def build_super_streams(
     vdt = cb.val_dtype
     G = group_size_for(B) if group_size is None else int(group_size)
     if G < 1:
-        raise ValueError(f"group_size must be >= 1, got {G}")
+        raise errors.InvalidArgError(f"group_size must be >= 1, got {G}")
 
     dense, panels, coos = _collect_blocks(cb)
 
@@ -785,7 +786,7 @@ def build_super_tile_stream(
     B = ts.block_size
     G = group_size_for(B) if group_size is None else int(group_size)
     if G < 1:
-        raise ValueError(f"group_size must be >= 1, got {G}")
+        raise errors.InvalidArgError(f"group_size must be >= 1, got {G}")
 
     tiles = np.asarray(ts.tiles)
     brow = np.asarray(ts.brow)

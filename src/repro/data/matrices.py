@@ -160,7 +160,7 @@ def spd_corpus(scale: str = "small", seed: int = 0):
     elif scale == "bench":
         dims = [4096, 8192]
     else:
-        raise ValueError(scale)
+        raise errors.InvalidArgError(scale)
     out = []
     for i, d in enumerate(dims):
         r, c, v = spd_banded(d, bandwidth=9 + 2 * i, seed=seed + i)
@@ -285,7 +285,7 @@ def corpus(scale: str = "small", seed: int = 0):
     elif scale == "bench":
         sizes = [(4096, 4096), (8192, 8192), (16384, 16384)]
     else:
-        raise ValueError(scale)
+        raise errors.InvalidArgError(scale)
     out = []
     i = 0
     for m, n in sizes:

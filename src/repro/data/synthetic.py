@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+from repro import errors
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,7 +26,7 @@ class SyntheticTokenStream:
 
     def __init__(self, cfg: DataConfig, host_id: int = 0, num_hosts: int = 1):
         if cfg.global_batch % num_hosts:
-            raise ValueError("global_batch must divide across hosts")
+            raise errors.InvalidArgError("global_batch must divide across hosts")
         self.cfg = cfg
         self.host_id = host_id
         self.num_hosts = num_hosts

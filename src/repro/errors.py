@@ -40,6 +40,9 @@ ARTIFACT_CORRUPT = "artifact-corrupt"          # checksum / byte-level damage
 ARTIFACT_SCHEMA = "artifact-schema"            # unknown or wrong schema tag
 PLAN_STALE = "plan-stale"                      # plan fails check_valid
 
+# API misuse
+INVALID_ARGUMENT = "invalid-argument"          # caller-supplied value rejected
+
 # payloads + structure
 NONFINITE_PAYLOAD = "nonfinite-payload"        # NaN/Inf in matrix values
 STRUCTURE_DRIFT = "structure-drift"            # update pattern != structure
@@ -100,6 +103,17 @@ class SchemaError(ArtifactError):
     """An artifact carries an unknown or incompatible schema tag."""
 
     code = ARTIFACT_SCHEMA
+
+
+class InvalidArgError(ReproError, ValueError):
+    """A caller-supplied argument failed validation (API misuse).
+
+    The taxonomy home for the historical bare ``raise ValueError`` at
+    library entry points — enforced by cblint rule CB401 — so even
+    plain validation failures carry a stable ``.code``.
+    """
+
+    code = INVALID_ARGUMENT
 
 
 class PlanStaleError(ReproError, ValueError):

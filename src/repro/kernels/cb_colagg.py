@@ -41,6 +41,7 @@ from jax.experimental import pallas as pl
 
 from repro.compat import pallas_call_tpu
 from repro.core.streams import SUBLANE
+from repro import errors
 
 
 def _panel_kernel_batched(panels_ref, xg_ref, out_ref, *, slots: int):
@@ -62,7 +63,7 @@ def panel_spmv_batched(
     """Per-slot partial y tiles — (gp, W // SUBLANE, B) float32."""
     gp, B, W = panels.shape
     if W % SUBLANE:
-        raise ValueError(f"packed width {W} not a multiple of {SUBLANE}")
+        raise errors.InvalidArgError(f"packed width {W} not a multiple of {SUBLANE}")
     slots = W // SUBLANE
     return pallas_call_tpu(
         functools.partial(_panel_kernel_batched, slots=slots),

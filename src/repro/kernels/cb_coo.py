@@ -39,6 +39,7 @@ from jax.experimental import pallas as pl
 from repro.compat import pallas_call_tpu
 from repro.core.aggregation import coord_bits
 from repro.core.streams import SUBLANE
+from repro import errors
 
 
 def _decode(codes, B):
@@ -78,7 +79,7 @@ def coo_spmv_batched(
     """Per-slot partial y tiles — (gc, W // SUBLANE, B) float32."""
     gc, W = codes.shape
     if W % SUBLANE:
-        raise ValueError(f"packed width {W} not a multiple of {SUBLANE}")
+        raise errors.InvalidArgError(f"packed width {W} not a multiple of {SUBLANE}")
     slots = W // SUBLANE
     B = block_size
     return pallas_call_tpu(

@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_call_tpu
 from repro.core.streams import LANE
+from repro import errors
 
 
 def _spmm_group_kernel(bcol_ref, tiles_ref, *refs, group_size: int,
@@ -85,9 +86,9 @@ def super_tile_spmm(
     Gt = GtB // B
     _, _, Npad = Xb.shape
     if block_n % LANE:
-        raise ValueError(f"block_n {block_n} not a multiple of {LANE} lanes")
+        raise errors.InvalidArgError(f"block_n {block_n} not a multiple of {LANE} lanes")
     if Npad % block_n:
-        raise ValueError(f"padded width {Npad} not a multiple of {block_n}")
+        raise errors.InvalidArgError(f"padded width {Npad} not a multiple of {block_n}")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(Npad // block_n, gt),

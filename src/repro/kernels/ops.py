@@ -38,10 +38,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import errors, obs
 from repro.core.streams import (
-    SUBLANE, SpMVStreams, SuperBlockStreams, SuperTileStream, TileStream,
-    even_group, spmm_block_n,
+    LANE, SUBLANE, SpMVStreams, SuperBlockStreams, SuperTileStream,
+    TileStream, even_group, spmm_block_n,
 )
 
 from . import cb_block_dense, cb_colagg, cb_coo, ref
@@ -149,12 +149,12 @@ def _resolve_plan(streams, plan, group_size):
     if plan is None:
         return group_size
     if plan.block_size != streams.block_size:
-        raise ValueError(
+        raise errors.InvalidArgError(
             f"plan was made for block_size={plan.block_size}; "
             f"streams carry block_size={streams.block_size}"
         )
     if group_size is not None and group_size != plan.group_size:
-        raise ValueError(
+        raise errors.InvalidArgError(
             f"plan chose group_size={plan.group_size}; conflicting "
             f"explicit group_size={group_size}"
         )
@@ -212,7 +212,7 @@ def spmm_launch_stats(
     group_size: int | None = None,
     *,
     n_cols: int | None = None,
-    block_n: int = 128,
+    block_n: int = LANE,
 ) -> dict:
     """``cb_spmm``'s analogue of :func:`spmv_launch_stats`.
 
@@ -298,7 +298,7 @@ def _cb_spmv_jit(
             return ref.super_spmv(streams, x)
         return ref.cb_spmv(streams, x)
     if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
+        raise errors.InvalidArgError(f"unknown impl {impl!r}")
     sup = (streams if isinstance(streams, SuperBlockStreams)
            else _regroup(streams, group_size or 1))
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -348,10 +348,10 @@ def cb_spmv(
 def _check_group_size(streams, group_size) -> None:
     """Shared argument contract of ``cb_spmv`` / ``cb_spmv_into``."""
     if group_size is not None and group_size < 1:
-        raise ValueError(f"group_size must be >= 1, got {group_size}")
+        raise errors.InvalidArgError(f"group_size must be >= 1, got {group_size}")
     if isinstance(streams, SuperBlockStreams):
         if group_size is not None and group_size != streams.group_size:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"stream was packed with group_size={streams.group_size}; "
                 f"cannot re-batch to {group_size} post hoc"
             )
@@ -388,7 +388,7 @@ def _cb_spmv_into_jit(
     if impl == "reference":
         return y_acc + _cb_spmv_jit(streams, x, impl="reference")
     if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
+        raise errors.InvalidArgError(f"unknown impl {impl!r}")
     sup = (streams if isinstance(streams, SuperBlockStreams)
            else _regroup(streams, group_size or 1))
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -434,10 +434,10 @@ def cb_spmv_into(
 def _check_tile_group_size(stream, group_size) -> None:
     """``cb_spmm``'s group-size contract (mirrors ``_check_group_size``)."""
     if group_size is not None and group_size < 1:
-        raise ValueError(f"group_size must be >= 1, got {group_size}")
+        raise errors.InvalidArgError(f"group_size must be >= 1, got {group_size}")
     if isinstance(stream, SuperTileStream):
         if group_size is not None and group_size != stream.group_size:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"tile stream was packed with group_size={stream.group_size};"
                 f" cannot re-batch to {group_size} post hoc"
             )
@@ -472,7 +472,7 @@ def _cb_spmm_jit(
     *,
     impl: str = "pallas",
     interpret: bool | None = None,
-    block_n: int = 128,
+    block_n: int = LANE,
     group_size: int | None = None,
     plan=None,
 ) -> jax.Array:
@@ -483,7 +483,7 @@ def _cb_spmm_jit(
             return ref.super_spmm(stream, X)
         return ref.cb_spmm(stream, X)
     if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
+        raise errors.InvalidArgError(f"unknown impl {impl!r}")
     sup = (stream if isinstance(stream, SuperTileStream)
            else _regroup_tiles(stream, group_size or 1))
     interp = (not _on_tpu()) if interpret is None else interpret
@@ -508,7 +508,7 @@ def cb_spmm(
     *,
     impl: str = "pallas",
     interpret: bool | None = None,
-    block_n: int = 128,
+    block_n: int = LANE,
     group_size: int | None = None,
     plan=None,
 ) -> jax.Array:

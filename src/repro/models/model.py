@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro import errors
 
 from . import encdec, hybrid, transformer
 from .layers import build_mlp_specs
@@ -33,7 +34,7 @@ class Model:
         elif cfg.family == "encdec":
             self._mod = encdec
         else:
-            raise ValueError(f"unknown family {cfg.family!r}")
+            raise errors.InvalidArgError(f"unknown family {cfg.family!r}")
 
     # ------------------------------------------------------------------
     def axes(self):

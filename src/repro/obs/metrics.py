@@ -36,6 +36,7 @@ import json
 import math
 import threading
 import time
+from repro import errors
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +122,7 @@ class Counter(Instrument):
         if not CONFIG.enabled:
             return
         if value < 0:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"counter {self.name!r}: negative increment {value!r}"
             )
         key = _label_key(labels)

@@ -13,6 +13,7 @@ preserved by construction (batch shards over data only).
 from __future__ import annotations
 
 import dataclasses
+from repro import errors
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,7 +43,7 @@ def plan_mesh(
     (pure DP across pods: cross-pod traffic rides the slower DCN links).
     """
     if available_devices < 1:
-        raise ValueError("no devices")
+        raise errors.InvalidArgError("no devices")
     model = prefer_model
     while model > 1 and available_devices % model:
         model //= 2

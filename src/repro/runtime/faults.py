@@ -45,7 +45,7 @@ def flip_file_bytes(path, *, n: int = 1, seed: int = 0,
         data = bytearray(f.read())
     stop = len(data) if stop is None else min(stop, len(data))
     if start >= stop:
-        raise ValueError(f"empty flip range [{start}, {stop}) for {path}")
+        raise errors.InvalidArgError(f"empty flip range [{start}, {stop}) for {path}")
     span = stop - start
     offsets = start + rng.choice(span, size=min(n, span), replace=False)
     flips = []
@@ -83,7 +83,7 @@ def corrupt_packed_values(cb, *, n: int = 1, seed: int = 0, value=np.nan):
     rng = np.random.default_rng(seed)
     layout = cb.value_layout()
     if layout.count == 0:
-        raise ValueError("matrix has no stored values to corrupt")
+        raise errors.InvalidArgError("matrix has no stored values to corrupt")
     vsize = cb.val_dtype.itemsize
     idx = rng.choice(layout.count, size=min(n, layout.count), replace=False)
     pos = layout.byte_pos[np.sort(idx)]

@@ -23,6 +23,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.cb_matrix import CBMatrix
+from repro import errors
 
 from .operator import CBLinearOperator
 
@@ -232,12 +233,12 @@ class EvolvingPageRank:
         """Per-original-edge weights -> canonical transition values."""
         w = np.asarray(weights, np.float64)
         if w.shape != self.edge_map.shape:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"expected one weight per original edge "
                 f"({self.edge_map.shape[0]}), got shape {w.shape}"
             )
         if not np.all(w > 0):
-            raise ValueError(
+            raise errors.InvalidArgError(
                 "edge weights must stay positive — a zero weight removes "
                 "the edge (structure drift); rebuild instead"
             )

@@ -528,7 +528,7 @@ def robust_solve(
 
     unknown = [m for m in methods if m not in _CHAIN_SOLVERS]
     if unknown:
-        raise ValueError(
+        raise errors.InvalidArgError(
             f"unknown methods {unknown}; choose from "
             f"{sorted(_CHAIN_SOLVERS)}"
         )
@@ -539,7 +539,7 @@ def robust_solve(
     if max_attempts is not None:
         ladder = ladder[:max_attempts]
     if not ladder:
-        raise ValueError("robust_solve: empty fallback ladder")
+        raise errors.InvalidArgError("robust_solve: empty fallback ladder")
 
     gmres_cycles = max(1, math.ceil(maxiter / restart))
     common = dict(tol=tol, impl=impl, interpret=interpret, divtol=divtol)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.cb_matrix import CBMatrix
 from repro.core.streams import (
+    LANE,
     SuperBlockStreams,
     SuperStreamUpdater,
     SuperTileStream,
@@ -44,6 +45,7 @@ from repro.core.streams import (
     transposed_super_stream_updater,
 )
 from repro.kernels import ops
+from repro import errors
 
 
 @dataclasses.dataclass
@@ -121,14 +123,14 @@ class CBLinearOperator:
         """
         if plan is not None:
             if group_size is not None:
-                raise ValueError(
+                raise errors.InvalidArgError(
                     "pass either plan= or group_size=, not both — a plan "
                     "carries its own group size"
                 )
             rows, cols, vals = cb.to_coo()
             if isinstance(plan, str):
                 if plan != "auto":
-                    raise ValueError(f"unknown plan mode {plan!r}")
+                    raise errors.InvalidArgError(f"unknown plan mode {plan!r}")
                 plan = CBMatrix.plan_for(
                     rows, cols, vals, cb.shape,
                     val_dtype=cb.val_dtype, cache=plan_cache,
@@ -169,7 +171,7 @@ class CBLinearOperator:
         solvers keep their traces across updates.
         """
         if self.updater is None:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 "operator was built with updatable=False; rebuild with "
                 "CBLinearOperator.from_cb(cb, updatable=True)"
             )
@@ -213,7 +215,7 @@ class CBLinearOperator:
                 interpret: bool | None = None) -> jax.Array:
         """``A^T @ y`` — y: (m,) -> (n,) via the precomputed transpose."""
         if self.streams_T is None:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 "operator was built with with_rmatvec=False; rebuild with "
                 "CBLinearOperator.from_cb(cb, with_rmatvec=True)"
             )
@@ -221,7 +223,7 @@ class CBLinearOperator:
 
     def matmat(self, X: jax.Array, *, impl: str = "pallas",
                interpret: bool | None = None,
-               block_n: int = 128,
+               block_n: int = LANE,
                group_size: int | None = None) -> jax.Array:
         """``A @ X`` — X: (n, N) -> (m, N) via the batched SpMM stream.
 
@@ -230,7 +232,7 @@ class CBLinearOperator:
         rejects a conflicting value), mirroring ``cb_spmv``'s contract.
         """
         if self.tiles is None:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 "operator was built with with_matmat=False; rebuild with "
                 "CBLinearOperator.from_cb(cb, with_matmat=True)"
             )

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.streams import TileStream, build_tile_stream
+from repro import errors
 
 from .prune import block_sparsity_pattern
 
@@ -144,7 +145,7 @@ def spec_from_mask(
     mb, nb = -(-out_features // B), -(-in_features // B)
     mask = np.asarray(mask, bool)
     if mask.shape != (mb, nb):
-        raise ValueError(
+        raise errors.InvalidArgError(
             f"mask shape {mask.shape} != block grid ({mb}, {nb}) for "
             f"({out_features}, {in_features}) at B={B}"
         )
@@ -353,7 +354,7 @@ def cb_linear_apply(
     """
     if plan is not None:
         if group_size is not None and group_size != plan.group_size:
-            raise ValueError(
+            raise errors.InvalidArgError(
                 f"plan chose group_size={plan.group_size}; conflicting "
                 f"explicit group_size={group_size}"
             )

@@ -1,0 +1,2 @@
+"""CB002 negative: a well-formed file produces no parse finding."""
+VALUE = 42

@@ -1,0 +1,6 @@
+"""CB101 negative: the compat shim is the sanctioned spelling."""
+from repro.compat import tpu_compiler_params
+
+
+def build_params():
+    return tpu_compiler_params(dimension_semantics=("parallel",))

@@ -1,0 +1,6 @@
+"""CB101 positive: drifting compiler-params spellings outside compat.py."""
+from jax.experimental.pallas import tpu as pltpu
+
+
+def build_params():
+    return pltpu.CompilerParams(dimension_semantics=("parallel",))

@@ -1,0 +1,6 @@
+"""CB102 negative: kernels launch through compat.pallas_call_tpu."""
+from repro.compat import pallas_call_tpu
+
+
+def launch(kernel, out_shape):
+    return pallas_call_tpu(kernel, out_shape=out_shape, interpret=True)

@@ -1,0 +1,6 @@
+"""CB102 positive: a raw pl.pallas_call call site outside compat.py."""
+from jax.experimental import pallas as pl
+
+
+def launch(kernel, out_shape):
+    return pl.pallas_call(kernel, out_shape=out_shape)

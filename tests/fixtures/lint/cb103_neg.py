@@ -1,0 +1,6 @@
+"""CB103 negative: the version-stable compat entry point."""
+from repro.compat import shard_map
+
+
+def wrap(f, mesh, specs):
+    return shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)

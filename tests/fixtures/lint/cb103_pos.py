@@ -1,0 +1,9 @@
+"""CB103 positive: both drifting shard_map spellings."""
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+def wrap(f, mesh, specs):
+    legacy = shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)
+    modern = jax.shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)
+    return legacy, modern

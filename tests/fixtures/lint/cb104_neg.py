@@ -1,0 +1,6 @@
+"""CB104 negative: compat.make_mesh handles the kwarg drift."""
+from repro.compat import make_mesh
+
+
+def build_mesh():
+    return make_mesh((1,), ("x",))

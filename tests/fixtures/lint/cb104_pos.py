@@ -1,0 +1,6 @@
+"""CB104 positive: axis_types= does not exist on JAX 0.4.x."""
+import jax
+
+
+def build_mesh(axis_type):
+    return jax.make_mesh((1,), ("x",), axis_types=(axis_type,))

@@ -1,0 +1,14 @@
+"""CB201 negative: the same side effects in host-side shims are fine."""
+import time
+
+import numpy as np
+
+from repro import obs
+
+
+def apply_shim(x):
+    obs.counter("repro.fixture.calls").inc()
+    noise = np.random.default_rng(0).normal()
+    t0 = time.perf_counter()
+    print("host side", t0)
+    return x * noise

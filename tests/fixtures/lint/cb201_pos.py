@@ -1,0 +1,22 @@
+"""CB201 positive: host side effects inside traced code."""
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro import obs
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _apply_jit(x, *, mode="fast"):
+    obs.counter("repro.fixture.calls").inc()
+    print("tracing", mode)
+    noise = np.random.default_rng(0).normal()
+    t0 = time.perf_counter()
+    return x * noise + t0
+
+
+def _scale_kernel(x_ref, o_ref):
+    print("inside kernel")
+    o_ref[...] = x_ref[...] * 2.0

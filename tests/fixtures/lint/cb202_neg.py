@@ -1,0 +1,13 @@
+"""CB202 negative: host-side materialization and static-arg coercion."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _scale_jit(x, *, mode=2):
+    return x * int(mode)
+
+
+def collapse(x, threshold):
+    return float(threshold) + x.sum().item()

@@ -1,0 +1,11 @@
+"""CB202 positive: materializing a tracer inside jitted code."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _collapse_jit(x, threshold, *, mode="fast"):
+    scalar = float(threshold)
+    total = x.sum().item()
+    return x * scalar + total

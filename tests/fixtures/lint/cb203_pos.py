@@ -1,0 +1,21 @@
+"""CB203 positive: unhashable values in jit-static slots."""
+import functools
+
+import jax
+
+
+def _solve(x, opts):
+    return x
+
+
+_solve_jit = jax.jit(_solve, static_argnums=(1,))
+result = _solve_jit(1.0, [4, 5])
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def _plan_jit(x, *, opts={"depth": 2}):
+    return x
+
+
+def run(stream, x):
+    return _plan_jit(x, opts={"depth": 3})

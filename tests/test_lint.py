@@ -1,0 +1,234 @@
+"""cblint gate + framework tests (marker: ``lint``).
+
+Three layers:
+
+  * **repo gate** — the analyzer over ``src/repro`` against the
+    checked-in (empty) baseline must report zero findings; a violation
+    anywhere in the library fails tier-1, which is the enforcement
+    mechanism ROADMAP's standing guardrails point at.
+  * **rule fixtures** — one positive + one negative file per rule under
+    ``tests/fixtures/lint/``: the positive must fire exactly its code,
+    the negative must be entirely clean, and the CLI must exit nonzero
+    on every positive (the check.sh failure proof).
+  * **framework** — suppression semantics (incl. CB001 rot detection),
+    baseline multiset matching, byte-identical ``--json`` determinism,
+    and the obs lint-health gauges.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import analysis, errors, obs
+from repro.analysis.findings import Finding
+
+pytestmark = pytest.mark.lint
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO_ROOT, "tests", "fixtures", "lint")
+SRC_REPRO = os.path.join(REPO_ROOT, "src", "repro")
+CLI = os.path.join(REPO_ROOT, "scripts", "cblint.py")
+
+# code -> fixture stem (CB302 lives under kernels/ because its rule is
+# scoped to kernel modules by path).
+RULE_FIXTURES = {
+    "CB001": "cb001",
+    "CB002": "cb002",
+    "CB101": "cb101",
+    "CB102": "cb102",
+    "CB103": "cb103",
+    "CB104": "cb104",
+    "CB201": "cb201",
+    "CB202": "cb202",
+    "CB203": "cb203",
+    "CB301": "cb301",
+    "CB302": "kernels/cb302",
+    "CB401": "cb401",
+    "CB501": "cb501",
+}
+
+
+def _fixture(stem: str, kind: str) -> str:
+    return os.path.join(FIXTURES, f"{stem}_{kind}.py")
+
+
+def _lint(paths, **kwargs):
+    return analysis.lint_paths(paths, root=REPO_ROOT, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# repo gate
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_lint_clean():
+    """Every repo invariant holds across src/repro (empty baseline)."""
+    result = _lint([SRC_REPRO], baseline_path=analysis.DEFAULT_BASELINE)
+    report = "\n".join(f.format() for f in result.findings)
+    assert not result.findings, f"cblint findings in src/repro:\n{report}"
+
+
+def test_checked_in_baseline_is_empty():
+    """ISSUE 9 policy: violations get fixed, not grandfathered."""
+    entries = analysis.load_baseline(analysis.DEFAULT_BASELINE)
+    assert entries == []
+
+
+def test_every_rule_has_a_fixture():
+    assert set(RULE_FIXTURES) == set(analysis.known_codes())
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("code", sorted(RULE_FIXTURES))
+def test_rule_fires_on_positive(code):
+    result = _lint([_fixture(RULE_FIXTURES[code], "pos")])
+    codes = {f.code for f in result.findings}
+    assert code in codes, f"{code} did not fire; got {sorted(codes)}"
+
+
+@pytest.mark.parametrize("code", sorted(RULE_FIXTURES))
+def test_rule_quiet_on_negative(code):
+    result = _lint([_fixture(RULE_FIXTURES[code], "neg")])
+    report = "\n".join(f.format() for f in result.findings)
+    assert not result.findings, f"negative fixture not clean:\n{report}"
+
+
+@pytest.mark.parametrize("code", sorted(RULE_FIXTURES))
+def test_cli_fails_on_injected_violation(code):
+    """check.sh's lint stage exits nonzero for every rule class."""
+    proc = subprocess.run(
+        [sys.executable, CLI, "--baseline", "none", "--no-obs",
+         _fixture(RULE_FIXTURES[code], "pos")],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert code in proc.stdout
+
+
+def test_cli_clean_exit_and_json():
+    proc = subprocess.run(
+        [sys.executable, CLI, "--baseline", "none", "--no-obs", "--json",
+         _fixture("cb401", "neg")],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["schema"] == analysis.SCHEMA
+    assert payload["findings"] == []
+    assert payload["files"] == 1
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_silences_named_code(tmp_path):
+    path = tmp_path / "mod.py"
+    path.write_text(
+        "def f(x):\n"
+        "    raise ValueError(x)  # cblint: disable=CB401\n"
+    )
+    result = analysis.lint_paths([str(path)], root=str(tmp_path))
+    assert not result.findings
+    assert result.suppressed == 1
+
+
+def test_suppression_is_line_scoped(tmp_path):
+    path = tmp_path / "mod.py"
+    path.write_text(
+        "def f(x):\n"
+        "    # cblint: disable=CB401\n"
+        "    raise ValueError(x)\n"
+    )
+    result = analysis.lint_paths([str(path)], root=str(tmp_path))
+    codes = sorted(f.code for f in result.findings)
+    # the raise still fires AND the off-line pragma is rot
+    assert codes == ["CB001", "CB401"]
+
+
+def test_cb001_not_inline_suppressible(tmp_path):
+    path = tmp_path / "mod.py"
+    path.write_text("x = 1  # cblint: disable=CB001\n")
+    result = analysis.lint_paths([str(path)], root=str(tmp_path))
+    assert [f.code for f in result.findings] == ["CB001"]
+    assert "cannot be inline-suppressed" in result.findings[0].message
+
+
+def test_docstring_mention_is_not_a_pragma(tmp_path):
+    path = tmp_path / "mod.py"
+    path.write_text('"""Docs showing `# cblint: disable=CB999`."""\nx = 1\n')
+    result = analysis.lint_paths([str(path)], root=str(tmp_path))
+    assert not result.findings
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_multiset_roundtrip(tmp_path):
+    f1 = Finding(path="a.py", line=3, col=1, code="CB401", message="m")
+    f2 = Finding(path="a.py", line=9, col=1, code="CB401", message="m")
+    f3 = Finding(path="a.py", line=4, col=1, code="CB301", message="n")
+    bl = tmp_path / "baseline.json"
+    analysis.save_baseline(str(bl), [f1, f3])
+    entries = analysis.load_baseline(str(bl))
+    # one entry excuses exactly one of the two identical-message findings
+    fresh, used = analysis.subtract_baseline([f1, f2, f3], entries)
+    assert [f.line for f in fresh] == [9]
+    assert sum(e["count"] for e in used) == 2
+    # line drift does not un-excuse a baselined finding
+    drifted = Finding(path="a.py", line=30, col=1, code="CB401", message="m")
+    fresh, _ = analysis.subtract_baseline([drifted, f3], entries)
+    assert fresh == []
+
+
+def test_baseline_schema_rejected(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text('{"schema": "wrong/v0", "findings": []}')
+    with pytest.raises(errors.SchemaError):
+        analysis.load_baseline(str(bl))
+
+
+# ---------------------------------------------------------------------------
+# determinism + obs
+# ---------------------------------------------------------------------------
+
+
+def test_json_report_is_byte_deterministic():
+    a = _lint([SRC_REPRO]).to_json()
+    b = _lint([SRC_REPRO]).to_json()
+    assert a == b
+    payload = json.loads(a)
+    records = payload["findings"]
+    keys = [(r["path"], r["line"], r["col"], r["code"]) for r in records]
+    assert keys == sorted(keys)
+
+
+def test_fixture_findings_sorted_and_deterministic():
+    a = _lint([FIXTURES]).to_json()
+    b = _lint([FIXTURES]).to_json()
+    assert a == b
+    counts = json.loads(a)["counts"]
+    assert all(n > 0 for n in counts.values())
+
+
+def test_obs_lint_health_gauges():
+    obs.reset()
+    _lint([_fixture("cb401", "pos")], record_obs=True)
+    snap = obs.snapshot()
+    series = snap["repro.analysis.findings"]["series"]
+    by_rule = {s["labels"]["rule"]: s["value"] for s in series}
+    assert by_rule["CB401"] == 2
+    assert by_rule["total"] == 2
+    assert snap["repro.analysis.files"]["series"][0]["value"] == 1
+    obs.reset()
