@@ -177,18 +177,13 @@ def access_stream_cb(rows, cols, vals, shape, B=16, vbytes=8,
 # ---------------------------------------------------------------------------
 
 def lru_hit_rate(line_stream: np.ndarray, cache_bytes: int) -> float:
-    """Fully-associative LRU over cache lines — the locality model."""
-    from collections import OrderedDict
+    """Fully-associative LRU over cache lines — the locality model.
 
-    capacity = max(1, cache_bytes // LINE)
-    cache: OrderedDict[int, None] = OrderedDict()
-    hits = 0
-    for line in line_stream.tolist():
-        if line in cache:
-            cache.move_to_end(line)
-            hits += 1
-        else:
-            cache[line] = None
-            if len(cache) > capacity:
-                cache.popitem(last=False)
-    return hits / max(1, len(line_stream))
+    Thin wrapper over the vectorized reuse-distance engine
+    (``repro.obs.locality``): bit-identical hit counts to the retired
+    per-access ``OrderedDict`` walk, without the per-access Python loop
+    that forced fig10's 300k-nnz cap.
+    """
+    from repro.obs import locality
+
+    return locality.lru_hit_rate(line_stream, cache_bytes, line_bytes=LINE)

@@ -1,0 +1,202 @@
+"""Persistent bench-run history: append-only JSONL across PRs.
+
+``BENCH_spmv.json`` is a single snapshot — it guards the *latest* run
+against the checked-in baseline but says nothing about the trajectory.
+This module gives every ``benchmarks/run.py --json`` run a durable
+record: one schema-versioned JSONL line per run (git sha, scale,
+section rows, the full ``obs.snapshot()`` including the lint-health
+gauges) appended to ``benchmarks/history/history.jsonl``, plus the
+trajectory/regression analysis that ``scripts/bench_trend.py`` renders.
+
+Regression detection is deliberately restricted to **deterministic,
+lower-is-better** scalars (padded work, grid steps, solver iterations,
+modeled cache misses, lint findings): those are pure preprocessing
+arithmetic, so any uptick is a real code change, never machine noise.
+Wall-clock timings ride along in the records for trajectory plots but
+are never flagged — history files travel across machines.
+
+Like ``benchmarks/registry.py`` this module is imported by standalone
+scripts and must stay dependency-free (stdlib only).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import subprocess
+import time
+
+HISTORY_SCHEMA = "cb-bench-history/v1"
+
+# Where records land; the env var reroutes (scripts/check.sh points it
+# at a scratch copy so CI runs never dirty the checked-in history).
+ENV_VAR = "REPRO_BENCH_HISTORY"
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "history", "history.jsonl")
+
+# Row keys whose per-section totals are deterministic and lower-is-
+# better — the only metrics --check flags. Superset of the bench
+# guard's ROW_GUARDED_PREFIXES plus the locality model's outputs.
+DETERMINISTIC_PREFIXES = (
+    "padded_elems_", "padded_ratio_", "steps_", "iters_",
+    "l1_misses_per_nnz_", "l2_misses_per_nnz_", "bytes_moved_",
+)
+
+
+def history_path(path: str | None = None) -> str:
+    return path or os.environ.get(ENV_VAR) or DEFAULT_PATH
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """HEAD sha of the working tree (``unknown`` outside a checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else "unknown"
+
+
+def record_from_payload(payload: dict, *, sha: str | None = None,
+                        timestamp: float | None = None) -> dict:
+    """Wrap one ``run.py --json`` payload as a history record."""
+    return {
+        "schema": HISTORY_SCHEMA,
+        "git_sha": sha if sha is not None else git_sha(),
+        "time": time.time() if timestamp is None else float(timestamp),
+        "scale": payload.get("scale"),
+        "sections": payload.get("sections", {}),
+        "metrics": payload.get("metrics", {}),
+    }
+
+
+def validate_record(record: object) -> list[str]:
+    """Schema problems of one record ([] = valid)."""
+    problems = []
+    if not isinstance(record, dict):
+        return [f"record is {type(record).__name__}, not a dict"]
+    if record.get("schema") != HISTORY_SCHEMA:
+        problems.append(
+            f"schema is {record.get('schema')!r}, expected {HISTORY_SCHEMA}")
+    for key, typ in (("git_sha", str), ("time", (int, float)),
+                     ("sections", dict), ("metrics", dict)):
+        if not isinstance(record.get(key), typ):
+            problems.append(f"'{key}' missing or wrong type")
+    return problems
+
+
+def append_record(record: dict, path: str | None = None) -> str:
+    """Validate + append one record; returns the file written."""
+    problems = validate_record(record)
+    if problems:
+        raise ValueError("invalid history record: " + "; ".join(problems))
+    path = history_path(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return path
+
+
+def read_history(path: str | None = None) -> list[dict]:
+    """All records, oldest first; malformed lines raise."""
+    path = history_path(path)
+    if not os.path.exists(path):
+        return []
+    records = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                record = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: bad JSON ({e})") from e
+            problems = validate_record(record)
+            if problems:
+                raise ValueError(
+                    f"{path}:{lineno}: " + "; ".join(problems))
+            records.append(record)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Trajectories + regression detection.
+# ---------------------------------------------------------------------------
+
+def scalar_metrics(record: dict) -> dict:
+    """Flatten one record to ``{metric_name: float}``.
+
+    Per guarded-style section key matching :data:`DETERMINISTIC_PREFIXES`,
+    the total across rows (totals, not means, so a new corpus matrix
+    shows up as a visible step rather than silently reweighting); plus
+    the lint-health gauges from the metrics snapshot.
+    """
+    out: dict[str, float] = {}
+    for name, rows in sorted(record.get("sections", {}).items()):
+        if not isinstance(rows, list):
+            continue
+        totals: dict[str, float] = {}
+        for row in rows:
+            if not isinstance(row, dict):
+                continue
+            for key, val in row.items():
+                if (isinstance(val, (int, float)) and math.isfinite(val)
+                        and key.startswith(DETERMINISTIC_PREFIXES)):
+                    totals[key] = totals.get(key, 0.0) + float(val)
+        for key, val in sorted(totals.items()):
+            out[f"{name}.{key}"] = val
+    findings = record.get("metrics", {}).get("repro.analysis.findings")
+    if isinstance(findings, dict):
+        for series in findings.get("series", []):
+            if series.get("labels", {}).get("rule") == "total":
+                out["lint.findings_total"] = float(series["value"])
+    return out
+
+
+def trajectories(records: list[dict]) -> dict:
+    """``{metric: [(sha, value), ...]}`` oldest->newest; gaps skipped."""
+    out: dict[str, list[tuple[str, float]]] = {}
+    for record in records:
+        sha = str(record.get("git_sha", "unknown"))[:12]
+        for name, val in scalar_metrics(record).items():
+            out.setdefault(name, []).append((sha, val))
+    return out
+
+
+def detect_regressions(records: list[dict], *, last_k: int = 5,
+                       rtol: float = 0.05,
+                       atol: float = 1e-9) -> list[str]:
+    """Deterministic metrics where the newest run regressed.
+
+    The newest record's value is compared against the **best** (lowest)
+    value over the preceding ``last_k`` records that carry the metric;
+    a value more than ``rtol`` above that best is flagged. Metrics only
+    the newest record has (a brand-new section) have no baseline and
+    pass. Fewer than two records -> nothing to compare, [].
+    """
+    if len(records) < 2:
+        return []
+    latest = scalar_metrics(records[-1])
+    window = records[-1 - last_k:-1]
+    problems = []
+    for name, value in sorted(latest.items()):
+        prior = [m[name] for r in window
+                 if name in (m := scalar_metrics(r))]
+        if not prior:
+            continue
+        best = min(prior)
+        if value > best * (1 + rtol) + atol:
+            problems.append(
+                f"{name}: {value:g} vs best {best:g} over last "
+                f"{len(prior)} record(s) (+{(value / best - 1) * 100:.1f}%"
+                f" > {rtol * 100:.0f}% tolerance)"
+                if best > 0 else
+                f"{name}: {value:g} vs best {best:g} over last "
+                f"{len(prior)} record(s)")
+    return problems

@@ -19,6 +19,7 @@ import json
 import os
 import time
 
+from . import history
 from .registry import SECTIONS, runner
 
 
@@ -78,12 +79,20 @@ def main() -> None:
         payload = {
             "schema": "cb-spmv-bench/v1",
             "scale": args.scale,
+            "git_sha": history.git_sha(),
             "sections": results,
             "metrics": obs.snapshot(),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
         print(f"[wrote {args.json}]", flush=True)
+
+        # every artifact run also extends the persistent trajectory
+        # (benchmarks/history/history.jsonl, or $REPRO_BENCH_HISTORY)
+        record = history.record_from_payload(
+            payload, sha=payload["git_sha"])
+        hist_path = history.append_record(record)
+        print(f"[appended history record to {hist_path}]", flush=True)
 
 
 if __name__ == "__main__":

@@ -38,7 +38,9 @@ sys.path.insert(
 )
 from benchmarks.registry import SECTIONS  # noqa: E402
 
-ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_", "iters_")
+ROW_GUARDED_PREFIXES = ("padded_elems_", "padded_ratio_", "steps_", "iters_",
+                        "l1_misses_per_nnz_", "l2_misses_per_nnz_",
+                        "bytes_moved_")
 MAX_RATIO = 2.0
 
 

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Render the bench-history trajectory and flag metric regressions.
+
+    python scripts/bench_trend.py [--history PATH] [--metric SUBSTR]
+                                  [--last K] [--check]
+
+Reads the append-only JSONL that every ``benchmarks/run.py --json`` run
+extends (``benchmarks/history/history.jsonl``, or ``$REPRO_BENCH_HISTORY``
+/ ``--history``) and prints, per deterministic metric, its value across
+runs oldest->newest with the git sha each value came from.
+
+``--check`` exits non-zero when the newest record regressed any
+deterministic lower-is-better metric (padded work, grid steps, solver
+iterations, modeled cache misses, lint findings) by more than 5% vs the
+best of the preceding ``--last`` records. Timings are never checked —
+history files cross machines. Dependency-free by design (stdlib only,
+same contract as ``scripts/bench_guard.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import history  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="history JSONL (default: $REPRO_BENCH_HISTORY or "
+                         "benchmarks/history/history.jsonl)")
+    ap.add_argument("--metric", default=None, metavar="SUBSTR",
+                    help="only print metrics containing SUBSTR")
+    ap.add_argument("--last", type=int, default=5, metavar="K",
+                    help="regression window: compare vs best of the "
+                         "preceding K records (default %(default)s)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any deterministic-metric regression")
+    args = ap.parse_args(argv)
+
+    path = history.history_path(args.history)
+    try:
+        records = history.read_history(path)
+    except ValueError as e:
+        print(f"bench_trend: corrupt history: {e}", file=sys.stderr)
+        return 1
+    if not records:
+        print(f"bench_trend: no records in {path}")
+        return 0
+
+    print(f"{len(records)} record(s) in {path}; newest: "
+          f"sha={str(records[-1].get('git_sha'))[:12]} "
+          f"scale={records[-1].get('scale')}")
+    trajs = history.trajectories(records)
+    shown = 0
+    for name, points in sorted(trajs.items()):
+        if args.metric and args.metric not in name:
+            continue
+        shown += 1
+        vals = " -> ".join(f"{v:g}[{sha}]" for sha, v in points)
+        print(f"  {name}: {vals}")
+    if args.metric and not shown:
+        print(f"  (no metric matches {args.metric!r})")
+
+    problems = history.detect_regressions(records, last_k=args.last)
+    if problems:
+        print(f"\n{len(problems)} regression(s) vs last "
+              f"{args.last} record(s):")
+        for p in problems:
+            print(f"  REGRESSION: {p}")
+        if args.check:
+            return 1
+    elif len(records) < 2:
+        print("\n(single record — nothing to compare yet)")
+    else:
+        print(f"\nno regressions vs last {args.last} record(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

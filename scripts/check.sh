@@ -24,8 +24,16 @@ python -m benchmarks.run --scale small --only fig34
 echo "== robustness: fault-injection axis (pytest -m robustness) =="
 python -m pytest -q -m robustness
 
-echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic + robustness + obs (--json + regression guard) =="
+echo "== benchmark smoke: spmv_batch + spmm + solvers + autotune + dynamic + robustness + obs + locality (--json + regression guard) =="
 BENCH_JSON="$(mktemp /tmp/bench_spmv.XXXXXX.json)"
-trap 'rm -f "$BENCH_JSON"' EXIT
-python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic,robustness,obs --json "$BENCH_JSON"
+# run.py --json appends a bench-history record; point it at a scratch
+# copy of the checked-in history so CI runs never dirty the tree, then
+# trend-check the extended copy (newest record vs checked-in trajectory).
+BENCH_HISTORY="$(mktemp /tmp/bench_history.XXXXXX.jsonl)"
+trap 'rm -f "$BENCH_JSON" "$BENCH_HISTORY"' EXIT
+cp benchmarks/history/history.jsonl "$BENCH_HISTORY"
+REPRO_BENCH_HISTORY="$BENCH_HISTORY" python -m benchmarks.run --scale small --only spmv_batch,spmm,solvers,autotune,dynamic,robustness,obs,locality --json "$BENCH_JSON"
 python scripts/bench_guard.py "$BENCH_JSON" benchmarks/BENCH_spmv.json
+
+echo "== bench trend: deterministic-metric trajectory check =="
+python scripts/bench_trend.py --history "$BENCH_HISTORY" --check

@@ -42,6 +42,7 @@ def _build_workload():
     cb = CBMatrix.from_coo(r, c, v.astype(np.float32), (d, d),
                            block_size=16, val_dtype=np.float32)
     op = CBLinearOperator.from_cb(cb, plan="auto")
+    locality = _locality_stats(op, int(cb.nnz))
     b = jnp.asarray(
         np.random.default_rng(0).standard_normal(d).astype(np.float32))
     res = robust_solve(op, b, tol=1e-6, maxiter=300)
@@ -56,7 +57,14 @@ def _build_workload():
         eng.submit(Request(uid=i, prompt=np.array([i + 1], np.int32),
                            max_new_tokens=2))
     eng.run_until_done(max_ticks=16)
-    return res, eng
+    return res, eng, locality
+
+
+def _locality_stats(op, nnz: int) -> dict:
+    """Modeled cache traffic of the operator's planned super-streams."""
+    from repro.obs import locality as loc
+
+    return loc.stream_stats(loc.access_stream_super(op.streams), nnz=nnz)
 
 
 def _counter_rows(snap: dict, name: str) -> list[tuple[str, float]]:
@@ -80,7 +88,7 @@ def main(argv=None) -> dict:
 
     obs.configure(enabled=True)
     obs.reset()
-    res, eng = _build_workload()
+    res, eng, locality = _build_workload()
 
     trace_path = obs.export_chrome_trace(args.out)
     trace = obs.chrome_trace()
@@ -129,8 +137,17 @@ def main(argv=None) -> dict:
                   f"measured={meas:<10g}predicted={pred:<10g}"
                   f"ratio={ratio:.3f}")
 
+    print("\nmodeled locality (planned super-streams, LRU line model):")
+    print(f"  l1_hit={locality['l1_hit_rate']:.3f} "
+          f"l2_hit={locality['l2_hit_rate']:.3f} "
+          f"l1miss/nnz={locality['l1_misses_per_nnz']:.4f} "
+          f"l2miss/nnz={locality['l2_misses_per_nnz']:.4f} "
+          f"lines={locality['unique_lines']} "
+          f"bytes_moved={locality['bytes_moved']} "
+          f"AI={locality['arith_intensity']:.2f}")
+
     return {"trace_path": trace_path, "trace": trace, "snapshot": snap,
-            "summary": obs.tracer().summary()}
+            "summary": obs.tracer().summary(), "locality": locality}
 
 
 if __name__ == "__main__":

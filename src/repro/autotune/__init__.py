@@ -22,6 +22,7 @@ from .features import (  # noqa: F401
     BlockProfile,
     MatrixFeatures,
     extract_features,
+    feature_vector,
     features_from_cb,
 )
 from .plan import (  # noqa: F401

@@ -141,6 +141,50 @@ def extract_features(
     )
 
 
+def feature_vector(features: MatrixFeatures) -> dict:
+    """Flatten ``MatrixFeatures`` to an ordered ``{name: scalar}`` dict.
+
+    The stable, named scalar view consumed by ``scripts/explain.py``
+    (the "why this plan" report) and intended as the input row for the
+    learned selector (ROADMAP): matrix-level moments first, then per
+    candidate block size the distribution summaries of the block
+    profile. Deterministic for a given matrix — pure arithmetic over
+    :func:`extract_features` output, no wall clock.
+    """
+    m, n = features.shape
+    out = {
+        "m": float(m),
+        "n": float(n),
+        "nnz": float(features.nnz),
+        "density": float(features.density),
+        "row_nnz_mean": float(features.row_nnz_mean),
+        "row_nnz_cv": float(features.row_nnz_cv),
+        "row_nnz_max": float(features.row_nnz_max),
+        "bandwidth_mean": float(features.bandwidth_mean),
+        "bandwidth_max": float(features.bandwidth_max),
+    }
+    for B in sorted(features.profiles):
+        prof = features.profiles[B]
+        tag = f"b{B}"
+        nnz_blk = prof.nnz_per_block
+        cols_blk = prof.cols_per_block
+        out[f"{tag}_num_blocks"] = float(prof.num_blocks)
+        out[f"{tag}_nnz_per_block_mean"] = (
+            float(nnz_blk.mean()) if len(nnz_blk) else 0.0)
+        out[f"{tag}_nnz_per_block_max"] = (
+            float(nnz_blk.max()) if len(nnz_blk) else 0.0)
+        out[f"{tag}_block_fill_mean"] = (
+            float(nnz_blk.mean()) / (B * B) if len(nnz_blk) else 0.0)
+        out[f"{tag}_cols_per_block_mean"] = (
+            float(cols_blk.mean()) if len(cols_blk) else 0.0)
+        out[f"{tag}_num_panels"] = float(len(prof.panel_nnz))
+        out[f"{tag}_panel_cols_mean"] = (
+            float(prof.panel_cols.mean()) if len(prof.panel_cols) else 0.0)
+        out[f"{tag}_super_sparse_fraction"] = float(
+            prof.super_sparse_fraction)
+    return out
+
+
 def features_from_cb(cb) -> MatrixFeatures:
     """Features of an already-built ``CBMatrix`` (original coordinates).
 

@@ -381,6 +381,33 @@ class SuperBlockStreams:
             "coo": int(np.prod(self.coo_codes.shape)),
         }
 
+    @property
+    def val_itemsize(self) -> int:
+        """Bytes per value element (payload dtype width)."""
+        return int(np.dtype(self.dense_tiles.dtype).itemsize)
+
+    def region_nbytes(self) -> dict:
+        """Byte size of every device buffer one SpMV pass touches.
+
+        Read-only shape metadata (no values are read), keyed by buffer
+        name in DMA order plus the ``x``/``y`` operand vectors — the
+        address-space layout the locality profiler
+        (``repro.obs.locality``) models traffic over.
+        """
+        vb = self.val_itemsize
+        ib = np.dtype(np.int32).itemsize
+        return {
+            "dense_tiles": int(self.dense_tiles.size) * vb,
+            "dense_xidx": int(self.dense_xidx.size) * ib,
+            "panel_vals": int(self.panel_vals.size) * vb,
+            "panel_xidx": int(self.panel_xidx.size) * ib,
+            "coo_codes": int(self.coo_codes.size) * ib,
+            "coo_vals": int(self.coo_vals.size) * vb,
+            "coo_xidx": int(self.coo_xidx.size) * ib,
+            "x": int(self.n) * vb,
+            "y": int(self.m) * vb,
+        }
+
 
 jax.tree_util.register_dataclass(
     SuperBlockStreams,
@@ -761,6 +788,20 @@ class SuperTileStream:
     def padded_work(self) -> dict:
         """Weight elements one full sweep streams, padding included."""
         return {"tiles": int(np.prod(self.tiles.shape))}
+
+    @property
+    def val_itemsize(self) -> int:
+        """Bytes per weight element (payload dtype width)."""
+        return int(np.dtype(self.tiles.dtype).itemsize)
+
+    def region_nbytes(self) -> dict:
+        """Byte size of the weight buffer one SpMM sweep streams.
+
+        Read-only shape metadata for the locality profiler; the X/Y
+        activation regions depend on the activation width and are laid
+        out by ``repro.obs.locality.access_stream_super_tile``.
+        """
+        return {"tiles": int(self.tiles.size) * self.val_itemsize}
 
 
 jax.tree_util.register_dataclass(

@@ -13,6 +13,12 @@ Zero-dependency (stdlib only). Three layers:
     private-counter APIs (``_TRACE_COUNTS``, ``PlanCache.hits``) intact
     while forwarding their increments into the registry.
 
+A fourth layer lives in the ``repro.obs.locality`` submodule (import it
+explicitly — it needs numpy, so it stays out of this package's
+stdlib-only import): the vectorized reuse-distance engine and the
+access-stream generators that model L1/L2 cache traffic of the planned
+super-block/super-tile pipelines (``repro.locality.*`` gauges).
+
 Everything is gated on ``obs.configure(enabled=...)`` (default ON;
 disabled instruments are no-op-cheap) and timed by the injectable
 ``configure(clock=...)`` so tests are deterministic. Instrumentation

@@ -1,0 +1,373 @@
+"""Locality profiler + bench history: engine exactness, generators,
+history round-trip, trend regression detection, explain schema.
+
+The load-bearing property: the vectorized reuse-distance engine's
+hit/miss counts are **bit-identical** to a brute-force fully-associative
+LRU walk, across random and adversarial (streaming / cyclic / blocked /
+capacity-boundary) streams at several capacities — that equivalence is
+what lets the guarded ``locality`` bench model unbounded streams with
+no per-access Python loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.obs import locality as loc
+
+
+def brute_lru_hits(stream, capacity: int) -> int:
+    """The retired per-access OrderedDict LRU — the reference."""
+    cache: OrderedDict[int, None] = OrderedDict()
+    hits = 0
+    for line in stream:
+        if line in cache:
+            cache.move_to_end(line)
+            hits += 1
+        else:
+            cache[line] = None
+            if len(cache) > capacity:
+                cache.popitem(last=False)
+    return hits
+
+
+CAPACITIES = (1, 2, 7, 64, 1000)
+
+
+def _adversarial_streams():
+    rng = np.random.default_rng(7)
+    C = 64  # exercised against capacity 64 below
+    return {
+        "streaming": np.arange(500),                       # all cold
+        "cyclic_fits": np.tile(np.arange(C - 1), 6),       # all hits after cold
+        "cyclic_thrash": np.tile(np.arange(C + 1), 6),     # LRU worst case
+        "blocked": np.repeat(np.arange(40), 9),            # long runs
+        "boundary_hit": np.r_[np.arange(C), 0],            # d = C-1 -> hit@C
+        "boundary_miss": np.r_[np.arange(C + 1), 0],       # d = C   -> miss@C
+        "random_small": rng.integers(0, 10, 400),
+        "random_wide": rng.integers(0, 5000, 3000),
+        "zipf": rng.zipf(1.5, 2000) % 499,
+        "single": np.zeros(100, np.int64),
+        "one": np.array([42]),
+        "interleave": np.arange(600) % 3 * 1000 + np.arange(600) // 3,
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_adversarial_streams()))
+def test_engine_bitmatches_brute_force(name):
+    stream = _adversarial_streams()[name]
+    prof = loc.reuse_profile(stream)
+    for cap in CAPACITIES:
+        expect = brute_lru_hits(stream.tolist(), cap)
+        got = prof.hits(cap * loc.LINE_BYTES)
+        assert got == expect, (name, cap)
+        assert prof.misses(cap * loc.LINE_BYTES) == len(stream) - expect
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_engine_bitmatches_random(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 800))
+    stream = rng.integers(0, max(2, n // 3), n)
+    prof = loc.reuse_profile(stream)
+    for cap in CAPACITIES:
+        assert prof.hits(cap * loc.LINE_BYTES) == \
+            brute_lru_hits(stream.tolist(), cap)
+
+
+def test_reuse_distances_known_values():
+    # d[i] = distinct lines between consecutive accesses to i's line
+    assert loc.reuse_distances(np.array([0, 1, 0])).tolist() == [-1, -1, 1]
+    assert loc.reuse_distances(
+        np.array([0, 1, 2, 0, 1, 2])).tolist() == [-1, -1, -1, 2, 2, 2]
+    # line ids need not be dense or sorted
+    assert loc.reuse_distances(
+        np.array([900, -3, 900])).tolist() == [-1, -1, 1]
+
+
+def test_empty_and_degenerate_streams():
+    prof = loc.reuse_profile(np.zeros(0, np.int64))
+    assert prof.accesses == 0 and prof.unique_lines == 0
+    assert prof.hits(loc.L1_BYTES) == 0
+    assert loc.lru_hit_rate(np.zeros(0, np.int64), loc.L1_BYTES) == 0.0
+    with pytest.raises(Exception):
+        loc.reuse_distances(np.zeros((2, 2), np.int64))
+
+
+def test_duplicate_collapse_is_exact():
+    # runs of the same line are unconditional hits: the collapsed
+    # profile + restored duplicates must equal the raw walk exactly
+    stream = np.repeat(np.array([5, 9, 5, 5, 9, 1]), [4, 1, 3, 2, 5, 1])
+    prof = loc.reuse_profile(stream)
+    assert prof.accesses == len(stream)
+    assert prof.collapsed_accesses == 5  # 5,9,5,9,1 (5,5 runs merge)
+    for cap in (1, 2, 3):
+        assert prof.hits(cap * loc.LINE_BYTES) == \
+            brute_lru_hits(stream.tolist(), cap)
+
+
+def test_formats_wrapper_matches_brute_force():
+    from benchmarks import formats as F
+
+    rng = np.random.default_rng(3)
+    stream = rng.integers(0, 300, 1500)
+    cap_bytes = 128 * F.LINE
+    assert F.lru_hit_rate(stream, cap_bytes) == pytest.approx(
+        brute_lru_hits(stream.tolist(), 128) / len(stream))
+
+
+def test_stream_stats_schema():
+    st = loc.stream_stats(np.arange(100), nnz=50)
+    for key in ("accesses", "unique_lines", "l1_hit_rate", "l2_hit_rate",
+                "l1_misses_per_nnz", "l2_misses_per_nnz", "bytes_moved",
+                "arith_intensity"):
+        assert key in st
+        assert np.isfinite(st[key])
+    assert st["accesses"] == 100
+    # 100 distinct lines, all cold at any capacity
+    assert st["unique_lines"] == 100
+    assert st["bytes_moved"] == 100 * loc.LINE_BYTES
+    assert st["arith_intensity"] == pytest.approx(
+        2 * 50 / (100 * loc.LINE_BYTES))
+
+
+# ---------------------------------------------------------------------------
+# Generators over the real stream metadata.
+# ---------------------------------------------------------------------------
+
+def _small_planned_streams():
+    from repro.autotune import SearchSettings
+    from repro.core import CBMatrix
+    from repro.core.streams import build_super_streams
+    from repro.data import matrices
+
+    r, c, v = matrices.spd_banded(96, bandwidth=7, seed=3)
+    v32 = v.astype(np.float32)
+    plan = CBMatrix.plan_for(r, c, v32, (96, 96),
+                             settings=SearchSettings(mode="heuristic"))
+    cb = CBMatrix.from_plan(r, c, v32, (96, 96), plan)
+    return build_super_streams(cb, group_size=plan.group_size)
+
+
+def test_access_stream_super_deterministic_and_obs_invariant():
+    from repro import obs
+
+    streams = _small_planned_streams()
+    a = loc.access_stream_super(streams)
+    assert len(a) > 0 and a.dtype == np.int64
+    was = obs.is_enabled()
+    try:
+        obs.configure(enabled=False)
+        b = loc.access_stream_super(streams)
+    finally:
+        obs.configure(enabled=was)
+    np.testing.assert_array_equal(a, b)
+    # y-scatter traffic only appears when asked, and only adds accesses
+    with_y = loc.access_stream_super(streams, include_output=True)
+    assert len(with_y) > len(a)
+
+
+def test_access_stream_super_covers_all_regions():
+    streams = _small_planned_streams()
+    a = loc.access_stream_super(streams)
+    reg = streams.region_nbytes()
+    # regions are laid out line-aligned, y last: without output traffic
+    # every touched line lies inside the x-and-payload address space
+    lines_before_y = sum(-(-v // loc.LINE_BYTES)
+                         for k, v in reg.items() if k != "y")
+    assert int(a.max()) < lines_before_y
+    payload_keys = [k for k in reg
+                    if k not in ("x", "y") and reg[k] > 0]
+    assert payload_keys  # the build produced at least one format
+
+
+def test_access_stream_super_tile_deterministic():
+    from repro.core.streams import super_tile_stream_from_cb
+
+    from repro.autotune import SearchSettings
+    from repro.core import CBMatrix
+    from repro.data import matrices
+
+    r, c, v = matrices.spd_banded(96, bandwidth=7, seed=3)
+    cb = CBMatrix.from_coo(r, c, v.astype(np.float32), (96, 96),
+                           block_size=16, val_dtype=np.float32)
+    ts = super_tile_stream_from_cb(cb)
+    a = loc.access_stream_super_tile(ts)
+    b = loc.access_stream_super_tile(ts)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) > 0
+    st = loc.stream_stats(a, nnz=int(cb.nnz))
+    assert 0.0 <= st["l1_hit_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Bench history + trend.
+# ---------------------------------------------------------------------------
+
+def _payload(padded=100, lint_total=0):
+    return {
+        "scale": "small",
+        "sections": {"autotune": [
+            {"matrix": "a", "padded_elems_planned": padded,
+             "steps_planned": 5, "t_solve": 1.23},
+        ]},
+        "metrics": {"repro.analysis.findings": {"series": [
+            {"labels": {"rule": "total"}, "value": lint_total}]}},
+    }
+
+
+def test_history_roundtrip(tmp_path):
+    from benchmarks import history
+
+    path = str(tmp_path / "h.jsonl")
+    rec = history.record_from_payload(_payload(), sha="abc", timestamp=1.0)
+    assert history.validate_record(rec) == []
+    history.append_record(rec, path)
+    history.append_record(
+        history.record_from_payload(_payload(90), sha="def", timestamp=2.0),
+        path)
+    out = history.read_history(path)
+    assert [r["git_sha"] for r in out] == ["abc", "def"]
+    assert out[0]["schema"] == history.HISTORY_SCHEMA
+    assert out[0]["sections"]["autotune"][0]["padded_elems_planned"] == 100
+
+
+def test_history_env_override(tmp_path, monkeypatch):
+    from benchmarks import history
+
+    path = str(tmp_path / "env.jsonl")
+    monkeypatch.setenv(history.ENV_VAR, path)
+    assert history.history_path() == path
+    history.append_record(
+        history.record_from_payload(_payload(), sha="x", timestamp=0.0))
+    assert len(history.read_history()) == 1
+
+
+def test_history_rejects_bad_records(tmp_path):
+    from benchmarks import history
+
+    assert history.validate_record({"schema": "nope"})
+    with pytest.raises(ValueError):
+        history.append_record({"schema": "nope"}, str(tmp_path / "x.jsonl"))
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("not json\n")
+    with pytest.raises(ValueError):
+        history.read_history(str(bad))
+
+
+def test_trend_regression_detection():
+    from benchmarks import history
+
+    def rec(i, padded, lint=0):
+        return history.record_from_payload(
+            _payload(padded, lint), sha=f"sha{i}", timestamp=float(i))
+
+    # improving trajectory: clean
+    recs = [rec(i, p) for i, p in enumerate([120, 110, 100])]
+    assert history.detect_regressions(recs) == []
+    # >5% uptick vs the best of the window: flagged
+    recs = [rec(0, 100), rec(1, 120)]
+    probs = history.detect_regressions(recs)
+    assert len(probs) == 1 and "padded_elems_planned" in probs[0]
+    # within tolerance: clean
+    assert history.detect_regressions([rec(0, 100), rec(1, 104)]) == []
+    # timings never flagged
+    recs = [rec(0, 100), rec(1, 100)]
+    recs[1]["sections"]["autotune"][0]["t_solve"] = 99.0
+    assert history.detect_regressions(recs) == []
+    # lint findings are guarded
+    probs = history.detect_regressions([rec(0, 100, 0), rec(1, 100, 3)])
+    assert any("lint.findings_total" in p for p in probs)
+    # a brand-new metric has no baseline -> passes
+    recs = [rec(0, 100), rec(1, 100)]
+    recs[1]["sections"]["locality"] = [
+        {"matrix": "a", "l2_misses_per_nnz_cb": 0.5}]
+    assert history.detect_regressions(recs) == []
+    # single record -> nothing to compare
+    assert history.detect_regressions([rec(0, 100)]) == []
+
+
+def test_bench_trend_cli(tmp_path):
+    from benchmarks import history
+
+    path = str(tmp_path / "h.jsonl")
+    history.append_record(
+        history.record_from_payload(_payload(100), sha="a", timestamp=1.0),
+        path)
+    history.append_record(
+        history.record_from_payload(_payload(130), sha="b", timestamp=2.0),
+        path)
+    sys.path.insert(0, "scripts")
+    try:
+        import bench_trend
+        assert bench_trend.main(["--history", path]) == 0       # report only
+        assert bench_trend.main(["--history", path, "--check"]) == 1
+    finally:
+        sys.path.pop(0)
+        sys.modules.pop("bench_trend", None)
+
+
+def test_run_json_appends_history_record(tmp_path, monkeypatch):
+    """run.py --json end-to-end: artifact has git_sha+scale, history
+    gains a valid record, and bench_trend --check accepts it."""
+    hist = str(tmp_path / "hist.jsonl")
+    out = str(tmp_path / "bench.json")
+    env = dict(os.environ)
+    env["REPRO_BENCH_HISTORY"] = hist
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--scale", "small",
+         "--only", "fig34", "--json", out],
+        capture_output=True, text=True, env=env, timeout=580)
+    assert r.returncode == 0, r.stderr[-2000:]
+    payload = json.load(open(out))
+    assert payload["schema"] == "cb-spmv-bench/v1"
+    assert payload["scale"] == "small"
+    assert isinstance(payload.get("git_sha"), str) and payload["git_sha"]
+
+    from benchmarks import history
+    records = history.read_history(hist)
+    assert len(records) == 1
+    assert records[0]["git_sha"] == payload["git_sha"]
+    assert "fig34" in records[0]["sections"]
+
+    r = subprocess.run(
+        [sys.executable, "scripts/bench_trend.py", "--history", hist,
+         "--check"],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# explain.py schema smoke.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_explain_schema(capsys):
+    sys.path.insert(0, "scripts")
+    try:
+        import explain
+        rep = explain.main(["--matrix", "banded_256x256", "--top-k", "3"])
+    finally:
+        sys.path.pop(0)
+        sys.modules.pop("explain", None)
+    assert rep["schema"] == "cb-explain/v1"
+    assert rep["matrix"] == "banded_256x256"
+    for key in ("features", "decision", "plan", "locality", "roofline"):
+        assert key in rep
+    assert len(rep["decision"]) == 3
+    assert rep["decision"][0]["rank"] == 0
+    assert {"cb", "csr", "bsr", "tile"} <= set(rep["locality"])
+    roof = rep["roofline"]
+    assert roof["bound"] in ("memory", "compute")
+    assert roof["arith_intensity"] > 0
+    # the whole report must be JSON-serializable (the --json contract)
+    json.dumps(rep)
+    out = capsys.readouterr().out
+    assert "cost-model ranking" in out and "roofline" in out
